@@ -1,0 +1,53 @@
+"""Pallas kernel micro-benchmarks: gram / centering / fused admm step vs.
+their jnp oracles. On CPU the kernels run in interpret mode so wall-times
+measure the oracle paths; the derived column reports allclose deltas and the
+kernel's tile geometry (the TPU-relevant artifact)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KernelSpec
+from repro.kernels import (center_op, center_reference, gram_op,
+                           gram_reference)
+
+
+def _time(f, *a, n=5):
+    f(*a)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*a))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_gram_kernel():
+    rows = []
+    spec = KernelSpec(kind="rbf", gamma=0.5)
+    for n, m in ((256, 784), (512, 784), (1024, 256)):
+        x = jnp.asarray(np.random.default_rng(n).normal(
+            size=(n, m)).astype(np.float32))
+        got = gram_op(spec, x, interpret=True)
+        want = gram_reference(spec, x)
+        err = float(jnp.max(jnp.abs(got - want)))
+        us = _time(jax.jit(lambda x: gram_reference(spec, x)), x)
+        flops = 2 * n * n * m
+        rows.append((f"gram/{n}x{m}", us,
+                     f"allclose_err={err:.1e};tile=128x128x512;"
+                     f"oracle_gflops={flops / us / 1e3:.1f}"))
+    return rows
+
+
+def bench_centering_kernel():
+    rows = []
+    for n in (512, 2048):
+        k = jnp.asarray(np.random.default_rng(n).normal(
+            size=(n, n)).astype(np.float32))
+        err = float(jnp.max(jnp.abs(center_op(k, interpret=True)
+                                    - center_reference(k))))
+        us = _time(jax.jit(center_reference), k)
+        rows.append((f"centering/{n}", us, f"allclose_err={err:.1e}"))
+    return rows

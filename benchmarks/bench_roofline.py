@@ -1,0 +1,29 @@
+"""Roofline summary rows from the dry-run artifact (results/dryrun.json).
+
+Reads whatever cells have completed; the full table lives in
+EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.roofline import analyze
+
+
+def bench_roofline_summary():
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun.json")
+    if not os.path.exists(path):
+        return [("roofline/missing", 0.0, "run repro.launch.dryrun first")]
+    rows = []
+    data = json.load(open(path))
+    for key, rec in sorted(data.items()):
+        if not rec.get("ok") or rec["mesh"] != "16x16":
+            continue
+        a = analyze(rec)
+        rows.append((f"roofline/{rec['arch']}/{rec['shape']}",
+                     a["compute_s"] * 1e6,
+                     f"dom={a['dominant']};frac={a['roofline_fraction']:.3f};"
+                     f"useful={a['useful_flops_ratio']:.2f}"))
+    return rows or [("roofline/empty", 0.0, "no completed cells yet")]

@@ -1,0 +1,110 @@
+"""§Perf hillclimb replay: runs the before/after variants for the three
+chosen cells and writes results/perf_iterations.json.
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb [--only a,b,c]
+
+Iterations (hypothesis -> change -> measure; narratives in EXPERIMENTS.md):
+  (a) llama3-405b x train_4k:
+      a0  RECORDED baseline before the activation-sharding fix (GSPMD
+          replicated the batch; 14.2 TB/device of f32 activation
+          all-reduces). Numbers archived from the pre-fix measurement —
+          the code change is models/common.constrain_act.
+      a1  current baseline (constraints on, remat=full)
+      a2  remat full -> dots (keep matmul outputs; trade memory for the
+          recompute FLOPs)
+      a3  bf16 logits CE in f32 via lse only (already default) — replaced
+          by: gradient all-reduce precision bf16 (comm term)
+  (b) mixtral-8x22b x prefill_32k:
+      b1  baseline (chunked attention, full quadratic with masking)
+      b2  swa_banded=True (skip out-of-window chunk pairs)
+  (c) dkpca-paper (per-ADMM-iteration):
+      c1  baseline fp32 messages
+      c2  message_dtype=bfloat16 (halve ICI payload)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+# dry-run environment (512 devices) — must import before jax init
+from repro.launch import dryrun as dr  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "perf_iterations.json")
+
+# archived pre-fix measurement (see EXPERIMENTS.md §Perf (a) iter 1)
+A0_RECORDED = {
+    "arch": "llama3-405b", "shape": "train_4k", "mesh": "16x16", "ok": True,
+    "note": "pre-fix baseline: no activation sharding constraints",
+    "flops_per_device": 2.168e16,
+    "bytes_accessed_per_device": float("nan"),
+    "collectives": {"all-reduce": {"count": 2156, "bytes": 1.5198e13},
+                    "all-gather": {"count": 2, "bytes": 3.363e10},
+                    "collective-permute": {"count": 1, "bytes": 4.0}},
+    "n_devices": 256, "n_params": 405.5e9, "n_active_params": 405.5e9,
+}
+
+
+def cell_a():
+    import jax.numpy as jnp  # noqa: F401
+    out = {"a0_prefix_baseline": A0_RECORDED}
+    cfg, _ = dr.resolve_cfg("llama3-405b", "train_4k")
+    r1 = dr.run_cell("llama3-405b", "train_4k", False)
+    out["a1_constrained_remat_full"] = dataclasses.asdict(r1)
+    cfg2 = dataclasses.replace(cfg, remat="dots")
+    r2 = dr.run_cell("llama3-405b", "train_4k", False, cfg=cfg2)
+    out["a2_remat_dots"] = dataclasses.asdict(r2)
+    return out
+
+
+def cell_b():
+    out = {}
+    cfg, _ = dr.resolve_cfg("mixtral-8x22b", "prefill_32k")
+    r1 = dr.run_cell("mixtral-8x22b", "prefill_32k", False)
+    out["b1_baseline_masked"] = dataclasses.asdict(r1)
+    cfg2 = dataclasses.replace(cfg, swa_banded=True)
+    r2 = dr.run_cell("mixtral-8x22b", "prefill_32k", False, cfg=cfg2)
+    out["b2_swa_banded"] = dataclasses.asdict(r2)
+    return out
+
+
+def cell_c():
+    import jax.numpy as jnp
+    out = {}
+    r1 = dr.run_dkpca_cell(False)
+    out["c1_baseline_fp32_msgs"] = dataclasses.asdict(r1)
+    r2 = dr.run_dkpca_cell(False, message_dtype=jnp.bfloat16, tag="-bf16msg")
+    out["c2_bf16_messages"] = dataclasses.asdict(r2)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="a,b,c")
+    args = ap.parse_args()
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    results = {}
+    if os.path.exists(RESULTS):
+        results = json.load(open(RESULTS))
+    for which in args.only.split(","):
+        print(f"[perf] running cell ({which}) ...", flush=True)
+        results.update({"a": cell_a, "b": cell_b, "c": cell_c}[which]())
+        with open(RESULTS, "w") as f:
+            json.dump(results, f, indent=1)
+    for k, v in results.items():
+        if not isinstance(v, dict) or not v.get("ok"):
+            continue
+        coll = sum(c["bytes"] for c in v.get("collectives", {}).values())
+        print(f"{k}: flops/dev={v.get('flops_per_device', 0):.4g} "
+              f"coll/dev={coll / 2**30:.2f}GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
+
+Paper tables/figures:
+    fig3  similarity vs #nodes          (bench_kpca.bench_similarity_vs_nodes)
+    fig4  similarity vs local samples   (bench_kpca.bench_similarity_vs_samples)
+    fig5  similarity vs #neighbors      (bench_kpca.bench_similarity_vs_neighbors)
+    rt    runtime vs central kPCA       (bench_kpca.bench_runtime_vs_central)
+plus kernel micro-benches and the roofline summary from the dry-run."""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from benchmarks.bench_kernels import (bench_centering_kernel,  # noqa: E402
+                                      bench_gram_kernel)
+from benchmarks.bench_kpca import (bench_runtime_vs_central,  # noqa: E402
+                                   bench_similarity_vs_neighbors,
+                                   bench_similarity_vs_nodes,
+                                   bench_similarity_vs_samples)
+from benchmarks.bench_roofline import bench_roofline_summary  # noqa: E402
+
+SUITES = {
+    "fig3": bench_similarity_vs_nodes,
+    "fig4": bench_similarity_vs_samples,
+    "fig5": bench_similarity_vs_neighbors,
+    "rt": bench_runtime_vs_central,
+    "kernels": lambda: bench_gram_kernel() + bench_centering_kernel(),
+    "roofline": bench_roofline_summary,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller feature dim for fast CI runs")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    for name in names:
+        fn = SUITES[name]
+        if args.quick and name in ("fig3", "fig4", "fig5", "rt"):
+            rows = fn(m=64)
+        else:
+            rows = fn()
+        for row in rows:
+            print(f"{row[0]},{row[1]:.1f},{row[2]}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The paper's experimental workflow end-to-end (Figs 3/4/5 regimes) plus
+the fault-tolerance story: a node dies mid-run, the ring re-knits, ADMM
+continues on the survivors.
+
+    PYTHONPATH=src python examples/decentralized_kpca.py [--m 784]
+"""
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (KernelSpec, build_setup, central_kpca, run_admm,
+                        similarity)
+from repro.core.topology import reknit, ring
+from repro.data import node_dataset
+
+SPEC = KernelSpec(kind="rbf")
+
+
+def mean_sim(alphas, nodes, pooled, ag, gamma):
+    return float(np.mean([
+        float(similarity(alphas[j], jnp.asarray(nodes[j]), ag,
+                         jnp.asarray(pooled), SPEC, gamma=gamma))
+        for j in range(nodes.shape[0])]))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=128)
+    ap.add_argument("--nodes", type=int, default=20)
+    args = ap.parse_args()
+
+    print(f"== decentralized kPCA: J={args.nodes}, N=100, M={args.m} ==")
+    nodes, pooled = node_dataset(args.nodes, 100, m=args.m, seed=0)
+    graph = ring(args.nodes, hops=2)
+    setup = build_setup(jnp.asarray(nodes), graph, SPEC)
+    ag, _, _ = central_kpca(jnp.asarray(pooled), SPEC, 1, gamma=setup.gamma)
+    res = run_admm(setup, n_iters=30)
+    for t in (1, 3, 7, 15, 29):
+        print(f"  iter {t + 1:3d}: similarity = "
+              f"{mean_sim(res.alpha_hist[t], nodes, pooled, ag[:, 0], setup.gamma):.4f}")
+
+    print("== node failure: nodes 5 and 6 die; ring re-knits ==")
+    g2, survivors = reknit(graph, [5, 6])
+    nodes2 = nodes[survivors]
+    pooled2 = nodes2.reshape(-1, nodes2.shape[-1])
+    setup2 = build_setup(jnp.asarray(nodes2), g2, SPEC)
+    ag2, _, _ = central_kpca(jnp.asarray(pooled2), SPEC, 1,
+                             gamma=setup2.gamma)
+    res2 = run_admm(setup2, n_iters=30)
+    print(f"  survivors' similarity to the *surviving-data* central "
+          f"solution: {mean_sim(res2.alpha, nodes2, pooled2, ag2[:, 0], setup2.gamma):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: decentralized kernel PCA in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Eight nodes on a ring, each holding 60 local samples, agree on the global
+first kernel principal component without any fusion center — then we check
+the result against central kPCA (which needs all the data in one place)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (KernelSpec, build_setup, central_kpca, run_admm,
+                        similarity)
+from repro.core.topology import ring
+from repro.data import node_dataset
+
+
+def main():
+    nodes, pooled = node_dataset(n_nodes=8, n_per_node=60, m=64, seed=0)
+    graph = ring(8, hops=2)                      # paper: 4 nearest neighbors
+    spec = KernelSpec(kind="rbf")                # gamma: median heuristic
+
+    setup = build_setup(jnp.asarray(nodes), graph, spec)
+    result = run_admm(setup, n_iters=30)         # paper Alg. 1
+
+    alpha_gt, _, _ = central_kpca(jnp.asarray(pooled), spec, 1,
+                                  gamma=setup.gamma)
+    sims = [float(similarity(result.alpha[j], jnp.asarray(nodes[j]),
+                             alpha_gt[:, 0], jnp.asarray(pooled), spec,
+                             gamma=setup.gamma))
+            for j in range(8)]
+    print("per-node similarity to the central solution:")
+    for j, s in enumerate(sims):
+        print(f"  node {j}: {s:.4f}")
+    print(f"mean: {np.mean(sims):.4f}  "
+          f"(paper Fig 3 reports > 0.91 in this regime)")
+    assert np.mean(sims) > 0.9
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Checkpointing: atomic, keep-last-k, async, elastic (mesh-independent).
+
+Layout (one directory per step):
+    ckpt_dir/step_000042/manifest.json      tree structure + shapes/dtypes
+    ckpt_dir/step_000042/<escaped-key>.npy  one file per leaf
+
+Leaves are saved as FULL logical arrays (gathered), so a checkpoint written
+on one mesh restores onto any other mesh/sharding ("elastic scaling") — at
+1000-node scale the same layout shards the .npy files per host; the manifest
+format already carries everything needed.
+
+Writes are atomic: a temp dir is renamed into place only after fsync, so a
+killed job never sees a torn checkpoint (tests/test_checkpoint.py simulates
+mid-write failure)."""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SAFE = {"/": "__", ".": "_d_"}
+
+
+def _escape(key: str) -> str:
+    for a, b in _SAFE.items():
+        key = key.replace(a, b)
+    return key
+
+
+def _unescape(key: str) -> str:
+    for a, b in _SAFE.items():
+        key = key.replace(b, a)
+    return key
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Dict[str, Any],
+                    metadata: Optional[dict] = None, keep_last: int = 3):
+    """tree: flat dict path -> array (nested pytrees: flatten first)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
+    for key, val in tree.items():
+        arr = np.asarray(jax.device_get(val))
+        fname = _escape(key) + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _cleanup(ckpt_dir, keep_last)
+    return final
+
+
+def save_checkpoint_async(ckpt_dir: str, step: int, tree, metadata=None,
+                          keep_last: int = 3) -> threading.Thread:
+    """Snapshot to host memory synchronously, write in a background thread
+    (training continues while the disk write proceeds)."""
+    snapshot = {k: np.asarray(jax.device_get(v)) for k, v in tree.items()}
+    t = threading.Thread(
+        target=save_checkpoint,
+        args=(ckpt_dir, step, snapshot),
+        kwargs={"metadata": metadata, "keep_last": keep_last}, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None,
+                       shardings: Optional[Dict[str, Any]] = None):
+    """Returns (tree, metadata). With ``shardings`` (path -> NamedSharding),
+    leaves are placed onto the target mesh — which may differ from the mesh
+    that wrote the checkpoint (elastic restore)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    tree = {}
+    for key, info in manifest["leaves"].items():
+        arr = np.load(os.path.join(d, info["file"]))
+        if shardings and key in shardings:
+            tree[key] = jax.device_put(arr, shardings[key])
+        else:
+            tree[key] = jax.numpy.asarray(arr)
+    return tree, manifest["metadata"], step
+
+
+def _cleanup(ckpt_dir: str, keep_last: int):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,99 @@
+"""Assigned input shapes and abstract input specs.
+
+    train_4k      seq_len=4096    global_batch=256   (training)
+    prefill_32k   seq_len=32768   global_batch=32    (inference-prefill)
+    decode_32k    seq_len=32768   global_batch=128   (one-token decode,
+                                                      KV cache of seq_len)
+    long_500k     seq_len=524288  global_batch=1     (long-context decode)
+
+``decode_*``/``long_*`` lower ``serve_step``, not ``train_step``.
+``long_500k`` is restricted to sub-quadratic archs (SSM / hybrid / SWA) —
+see DESIGN.md §Arch-applicability. ``input_specs`` returns
+ShapeDtypeStructs only (no allocation)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str       # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Is this (arch, shape) cell runnable? (Skips mandated by the spec.)"""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full quadratic attention at 524288-token context "
+                       "has no sub-quadratic path (skip mandated by the "
+                       "assignment; see DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec,
+                      seq: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract train/prefill batch. seq_len counts the decoder/backbone
+    sequence; VLM prefixes frontend_seq patch embeddings within it.
+    ``seq`` overrides the token length (cost-fit variants) while keeping
+    frame-stub lengths pinned to the full shape."""
+    b, s = shape.batch, seq or shape.seq
+    sd = jax.ShapeDtypeStruct
+    if cfg.family == "audio":
+        return {
+            "frames": sd((b, min(cfg.enc_seq, shape.seq), cfg.d_model),
+                         jnp.bfloat16),
+            "tokens": sd((b, s), jnp.int32),
+            "labels": sd((b, s), jnp.int32),
+        }
+    if cfg.family == "vlm" and cfg.frontend_seq:
+        f = cfg.frontend_seq
+        return {
+            "frontend": sd((b, f, cfg.d_model), jnp.bfloat16),
+            "tokens": sd((b, s - f), jnp.int32),
+            "labels": sd((b, s - f), jnp.int32),
+        }
+    return {"tokens": sd((b, s), jnp.int32), "labels": sd((b, s), jnp.int32)}
+
+
+def decode_specs(model, cfg: ArchConfig, shape: ShapeSpec):
+    """Abstract (cache, tokens, cache_len) for serve_step."""
+    b, s = shape.batch, shape.seq
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, cache_len
+
+
+def concrete_train_batch(cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
+    """Small concrete batch for smoke tests / examples."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, size=(batch, seq), dtype=np.int32)
+    out = {"tokens": jnp.asarray(toks),
+           "labels": jnp.asarray(np.roll(toks, -1, axis=1))}
+    if cfg.family == "vlm" and cfg.frontend_seq:
+        out["frontend"] = jnp.asarray(
+            rng.normal(0, 0.02, size=(batch, cfg.frontend_seq, cfg.d_model))
+            .astype(np.float32))
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.normal(0, 0.02, size=(batch, min(cfg.enc_seq, 4 * seq),
+                                      cfg.d_model)).astype(np.float32))
+    return out

@@ -1,0 +1,23 @@
+# The paper's primary contribution: decentralized kernel PCA with projection
+# consensus constraints (He, Yang, Shi, Huang — cs.DC 2022), plus its central
+# and local baselines.
+from .admm import (DkpcaResult, DkpcaSetup, admm_iteration,
+                   augmented_lagrangian, build_setup, run_admm, theorem2_rho)
+from .central import central_kpca, kpca_project
+from .kernels_math import (KernelSpec, center_gram, center_gram_global, gram,
+                           pairwise_sqdist, psd_jitter_eigh, resolve_gamma,
+                           topk_eigh)
+from .local import local_kpca, neighborhood_kpca
+from .metrics import similarity, subspace_alignment
+from .rho import RhoSchedule, assumption2_rho, auto_rho
+from . import topology
+
+__all__ = [
+    "DkpcaResult", "DkpcaSetup", "KernelSpec", "RhoSchedule",
+    "admm_iteration", "assumption2_rho", "augmented_lagrangian", "auto_rho",
+    "build_setup", "center_gram", "center_gram_global", "central_kpca",
+    "gram", "kpca_project", "local_kpca", "metrics", "neighborhood_kpca",
+    "pairwise_sqdist", "psd_jitter_eigh", "resolve_gamma", "run_admm",
+    "similarity", "subspace_alignment", "theorem2_rho", "topk_eigh",
+    "topology",
+]

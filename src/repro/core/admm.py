@@ -1,0 +1,386 @@
+"""Paper Alg. 1 — ADMM-based decentralized kernel PCA (reference simulator).
+
+This is the faithful, graph-general implementation of the paper's algorithm,
+fully in the dual (kernel) space. All J nodes are simulated in one process
+with vectorized updates; ``repro.core.dkpca`` is the SPMD (shard_map +
+collective_permute) production version, validated against this module.
+
+Variables per node j (paper §4.2): all live in dual space —
+  alpha_j in R^{N_j}
+  B_j = phi(X_j)^T eta_j in R^{N_j x S_j}   (one column per constraint slot)
+  G_j = phi(X_j)^T Z xi_j in R^{N_j x S_j}
+
+Constraint slots: the paper's problem (7) has a self constraint
+(w_j = P_j z_j, weight rho1) and neighbor consensus constraints
+(phi(X_j)alpha_j = P_j z_q, q in Omega_j, weight rho2); its eq. (10)-(13)
+write only the neighbor part with uniform rho. We implement the general
+per-slot-rho form (slot 0 = self, slots 1..D = neighbors); with
+``include_self=False`` and constant rho this reduces exactly to eq. (10)-(13).
+
+One ADMM iteration (uniform-rho form for reference):
+  Z:    z_hat_m = sum_{l in slots^-1(m)} phi(X_l)(K_l^-1 B_l[:,m] + rho alpha_l)/rho_bar_m
+        z_m = z_hat_m / max(1, ||z_hat_m||)                        (eq. 10-11)
+  alpha: alpha_j = [rho_bar K_j - 2 K_j^2]^-1 (rho G_j - B_j) 1    (eq. 12)
+  eta:  B_j[:,s] += rho_s (K_j alpha_j - G_j[:,s])                 (eq. 13)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels_math import KernelSpec, center_gram, gram, psd_jitter_eigh, resolve_gamma
+from .rho import RhoSchedule, auto_rho
+from .topology import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class DkpcaSetup:
+    """Static per-run tensors (trace-time constants are numpy; traced are jnp).
+
+    Slot layout: S = D + 1 where D = max degree. Slot 0 is the self slot
+    (masked out when include_self=False), slots 1..D are neighbors in graph
+    order. src[j, s] = data-owner node of slot s of node j;
+    rsl[j, s] = the slot index of node j inside node src[j,s]'s slot list.
+    """
+
+    x: jax.Array          # (J, N, M) node data
+    k: jax.Array          # (J, N, N) (centered) local Gram K_j
+    lam: jax.Array        # (J, N) floored eigenvalues of K_j (ascending)
+    vec: jax.Array        # (J, N, N) eigenvectors of K_j
+    kcross: jax.Array     # (J, S, S, N, N) kcross[j,a,b] = K(X_src[j,a], X_src[j,b])
+    src: jax.Array        # (J, S) int32
+    rsl: jax.Array        # (J, S) int32
+    mask: jax.Array       # (J, S) bool — valid slots
+    gamma: jax.Array      # scalar RBF bandwidth actually used
+    include_self: bool = True
+
+    @property
+    def n_nodes(self):
+        return self.x.shape[0]
+
+    @property
+    def n_local(self):
+        return self.x.shape[1]
+
+    @property
+    def n_slots(self):
+        return self.mask.shape[1]
+
+
+@dataclasses.dataclass
+class DkpcaResult:
+    alpha: jax.Array            # (J, N) final local solutions
+    alpha_hist: jax.Array       # (T, J, N)
+    lagrangian: jax.Array       # (T,) augmented Lagrangian value
+    primal_residual: jax.Array  # (T,) ||K alpha 1 - G||_F total
+    rho_hist: jax.Array         # (T,) rho2 used per iteration
+
+
+def _masked_center(kfull: jax.Array, valid: jax.Array) -> jax.Array:
+    """Center a square Gram over the valid rows/cols only (then zero the
+    invalid ones). kfull: (P, P); valid: (P,) bool."""
+    v = valid.astype(kfull.dtype)
+    nv = jnp.maximum(jnp.sum(v), 1.0)
+    row = (kfull @ v) / nv                               # mean over valid cols
+    col = (v @ kfull) / nv
+    tot = (v @ kfull @ v) / (nv * nv)
+    kc = kfull - row[:, None] - col[None, :] + tot
+    return kc * v[:, None] * v[None, :]
+
+
+def kernel_mean_stats(x_nodes: jax.Array, spec: KernelSpec, gamma):
+    """Global kernel mean statistics for consistent centering.
+
+    Returns (m, mu_bar): m[j, i] = mean_t K(x_i^(j), t) over ALL samples t in
+    the network, mu_bar = mean over all pairs.
+
+    Decentralized realization (one-time, before ADMM): node j computes
+    psi_j(x) = mean_i K(x, x_i^(j)) for every x it can evaluate, and the
+    network runs ONE consensus-averaging round on the per-sample partial
+    means (a gossip average; a single ``jax.lax.pmean`` on TPU). The paper
+    centers per-block instead, which makes cross-blocks inconsistent — see
+    EXPERIMENTS.md §Paper-validation for the measured bias.
+    """
+    j, n, _ = x_nodes.shape
+
+    def row_stats(x_j):
+        def acc(carry, x_l):
+            s = carry + jnp.sum(gram(spec, x_j, x_l, gamma=gamma), axis=1)
+            return s, None
+        s, _ = jax.lax.scan(acc, jnp.zeros((n,), x_nodes.dtype), x_nodes)
+        return s / (j * n)
+
+    m = jax.lax.map(row_stats, x_nodes)                  # (J, N)
+    mu_bar = jnp.mean(m)
+    return m, mu_bar
+
+
+def build_setup(x_nodes: jax.Array, graph: Graph, spec: KernelSpec,
+                center: str | bool = "global", include_self: bool = True,
+                rel_eps: float = 1e-6) -> DkpcaSetup:
+    """Precompute Gram blocks / factorizations; mirrors the paper's setup
+    phase where raw data is exchanged with neighbors and all K(X_p, X_q),
+    p,q in Omega_j, are formed once.
+
+    center:
+      "global" (default) — center every block with the *same* global kernel
+        mean statistics (one extra consensus-averaging round at setup, see
+        ``kernel_mean_stats``). All nodes then share one centered feature
+        space phi(x) - mu, and the consensus fixed point matches centered
+        central kPCA (measured similarity -> 1.0).
+      "neighborhood" — node j centers the Gram over the data it holds; the
+        feature-space offset mu_j then differs per node, which biases the
+        consensus fixed point. Kept for ablation.
+      "block" — the paper's §6.1 formula applied to every block separately.
+        Faithful to the text, but cross-blocks are then centered with
+        *different* means per side, which is not a valid Gram of any single
+        feature map; we measured the consensus fixed point drifting away
+        from the central solution (similarity 0.81 at iter 30 -> 0.70 at
+        iter 100 while the primal residual -> 0). Kept for comparison.
+      "none"/False — raw kernel (fixed point matches *uncentered* central
+        kPCA exactly; similarity 1.000 in our validation).
+    """
+    if center is True:
+        center = "global"
+    if center is False:
+        center = "none"
+    assert center in ("global", "neighborhood", "block", "none")
+    x_nodes = jnp.asarray(x_nodes)
+    j, n, _ = x_nodes.shape
+    assert j == graph.n_nodes
+    ids, rev, nmask = graph.neighbor_array()
+    d = ids.shape[1]
+    s = d + 1
+    src = np.concatenate([np.arange(j, dtype=np.int32)[:, None], ids], axis=1)
+    rsl = np.concatenate([np.zeros((j, 1), np.int32), rev + 1], axis=1)
+    mask = np.concatenate([np.full((j, 1), include_self), nmask], axis=1)
+    # slot-0 blocks (K_j) are always needed even when the self *constraint*
+    # is disabled, so Gram validity masking uses a mask with slot 0 on.
+    gmask = np.concatenate([np.full((j, 1), True), nmask], axis=1)
+
+    gamma = resolve_gamma(spec, x_nodes.reshape(j * n, -1))
+
+    xs = x_nodes[src]                                    # (J, S, N, M)
+
+    if center == "global":
+        m_glob, mu_bar = kernel_mean_stats(x_nodes, spec, gamma)
+        ms = m_glob[src]                                 # (J, S, N)
+    else:
+        ms = None
+
+    def node_gram(xs_j, gmask_j, ms_j):
+        xflat = xs_j.reshape(s * n, -1)
+        kfull = gram(spec, xflat, gamma=gamma)           # (S*N, S*N)
+        valid = jnp.repeat(gmask_j, n)
+        if center == "neighborhood":
+            kfull = _masked_center(kfull, valid)
+        elif center == "global":
+            mf = ms_j.reshape(s * n)
+            kfull = kfull - mf[:, None] - mf[None, :] + mu_bar
+            kfull = kfull * valid[:, None] * valid[None, :]
+        kb = kfull.reshape(s, n, s, n).transpose(0, 2, 1, 3)
+        if center == "block":
+            kb = jax.vmap(jax.vmap(center_gram))(kb)
+        return kb                                        # (S, S, N, N)
+
+    ms_arg = ms if ms is not None else jnp.zeros((j, s, n), x_nodes.dtype)
+    kcross = jax.vmap(node_gram)(xs, jnp.asarray(gmask), ms_arg)
+
+    kj = kcross[:, 0, 0]                                 # (J, N, N)
+    lam, vec = jax.vmap(lambda kk: psd_jitter_eigh(kk, rel_eps))(kj)
+    return DkpcaSetup(x=x_nodes, k=kj, lam=lam, vec=vec, kcross=kcross,
+                      src=jnp.asarray(src), rsl=jnp.asarray(rsl),
+                      mask=jnp.asarray(mask), gamma=gamma,
+                      include_self=include_self)
+
+
+def _slot_rho(setup: DkpcaSetup, rho1, rho2):
+    """(J, S) per-slot rho (0 on invalid slots)."""
+    j, s = setup.mask.shape
+    r = jnp.concatenate(
+        [jnp.full((j, 1), rho1), jnp.full((j, s - 1), rho2)], axis=1)
+    return r * setup.mask
+
+
+def _solve_kinv(setup: DkpcaSetup, b, rel_thresh=1e-5):
+    """K_j^{-1} b (pseudo-inverse on the row space of K_j). b: (J, N, ...)."""
+    lam, v = setup.lam, setup.vec
+    inv = jnp.where(lam > rel_thresh * lam[:, -1:], 1.0 / lam, 0.0)
+    tmp = jnp.einsum("jnm,jm...->jn...", jnp.swapaxes(v, 1, 2), b)
+    tmp = tmp * (inv[..., None] if tmp.ndim == 3 else inv)
+    return jnp.einsum("jnm,jm...->jn...", v, tmp)
+
+
+def admm_iteration(setup: DkpcaSetup, alpha, b, rho1, rho2,
+                   project: str = "ball"):
+    """One ADMM iteration (eq. 10-13, per-slot-rho generalization).
+
+    alpha: (J, N); b: (J, N, S). Returns (alpha', b', g, znorm2).
+    """
+    mask = setup.mask
+    rho_slots = _slot_rho(setup, rho1, rho2)              # (J, S)
+    rho_bar = jnp.sum(rho_slots, axis=1)                  # (J,) sum of in-slot
+    # rho-weights: by graph symmetry the in-slot weights of node m equal its
+    # own out-slot weights (self rho1, neighbors rho2).
+
+    # ---- Z-update -------------------------------------------------------
+    # message 1 (sent by src l): m1_l = K_l^{-1} B_l     (per out-slot column)
+    m1 = _solve_kinv(setup, b)                            # (J, N, S)
+    # gather onto in-slots of each node m: contribution of slot i (owner
+    # src[m,i], its out-slot rsl[m,i]):
+    #   c[m, i] = (m1_src[:, rsl] + rho_i * alpha_src) / rho_bar_m
+    m1_g = m1[setup.src, :, setup.rsl]                    # (J, S, N)
+    al_g = alpha[setup.src]                               # (J, S, N)
+    c = (m1_g + rho_slots[..., None] * al_g) / rho_bar[:, None, None]
+    c = c * mask[..., None]
+    # ||z_hat_m||^2 = sum_ab c_a^T K(X_a, X_b) c_b  over in-slots
+    znorm2 = jnp.einsum("jan,jabnm,jbm->j", c, setup.kcross, c)
+    rs = jax.lax.rsqrt(jnp.maximum(znorm2, 1e-30))
+    if project == "sphere":
+        # Always renormalize z. Experimental: breaks the dual-variable
+        # consistency of the ball-constrained problem (B integrates a
+        # persistent residual); kept for ablation only.
+        scale = rs
+    else:
+        # Paper eq. (11): project onto the unit *ball* ("ball"/"rescale").
+        # NOTE (§Repro insight): z=0 is then also a stationary point of the
+        # iteration; it only sustains while ||z_hat|| >= 1, which the paper's
+        # *unnormalized* Gaussian alpha-init gives at t=0 (||alpha0||~sqrt(N))
+        # and the "rescale" gauge (see run loop) maintains for t -> inf.
+        scale = jnp.where(znorm2 > 1.0, rs, 1.0)
+    # p[m, a] = phi(X_src[m,a])^T z_m for every in-slot owner a
+    p = scale[:, None, None] * jnp.einsum("jabnm,jbm->jan", setup.kcross, c)
+    # deliver: G_j[:, s] = phi(X_j)^T z_{dest of out-slot s} = p[src, rsl]
+    g = p[setup.src, setup.rsl] * mask[..., None]         # (J, S, N) slot-major
+    g = jnp.swapaxes(g, 1, 2)                             # (J, N, S)
+
+    # ---- alpha-update (eq. 12) -----------------------------------------
+    rhs = jnp.sum(rho_slots[:, None, :] * g - b * mask[:, None, :], axis=2)
+    lam = setup.lam
+    den = rho_bar[:, None] * lam - 2.0 * lam * lam
+    # drop (don't invert) directions where the alpha-Hessian is not PD —
+    # during the rho warm-up large-N kernels can violate Assumption 2 for a
+    # few iterations; clamping would amplify those modes into divergence.
+    inv = jnp.where((lam > 1e-5 * lam[:, -1:]) & (den > 0), 1.0 / den, 0.0)
+    vt_rhs = jnp.einsum("jnm,jm->jn", jnp.swapaxes(setup.vec, 1, 2), rhs)
+    alpha_new = jnp.einsum("jnm,jm->jn", setup.vec, inv * vt_rhs)
+
+    # ---- eta-update (eq. 13) -------------------------------------------
+    ka = jnp.einsum("jnm,jm->jn", setup.k, alpha_new)     # (J, N)
+    b_new = b + rho_slots[:, None, :] * (ka[..., None] - g)
+    b_new = b_new * mask[:, None, :]
+
+    if project == "rescale":
+        # Beyond-paper stabilization (gauge renormalization): while no node's
+        # ||z_hat|| exceeds 1, the whole iteration is 1-homogeneous in
+        # (alpha, B) jointly, so multiplying the state by a global constant
+        # replays the *same* trajectory in a different gauge. Rescale so the
+        # largest ||z_hat|| sits at the ball boundary; this removes the slow
+        # decay into the degenerate z=0 stationary point at long horizons
+        # (power iteration on the linear part of the ADMM map).
+        zmax = jnp.sqrt(jnp.maximum(jnp.max(znorm2), 1e-30))
+        gain = jnp.where(zmax < 1.0, 1.0 / zmax, 1.0)
+        alpha_new = alpha_new * gain
+        b_new = b_new * gain
+    return alpha_new, b_new, g, znorm2
+
+
+def augmented_lagrangian(setup: DkpcaSetup, alpha, b, g, rho1, rho2):
+    """Dual-space evaluation of eq. (8):
+    L = sum_j [ -a^T K^2 a + sum_s B_s^T C_s + sum_s rho_s/2 C_s^T K C_s ],
+    C_s = alpha - K^{-1} G_s (constraint residual coefficients)."""
+    rho_slots = _slot_rho(setup, rho1, rho2)
+    ka = jnp.einsum("jnm,jm->jn", setup.k, alpha)
+    obj = -jnp.sum(ka * ka, axis=1)                       # -||alpha^T K||^2
+    kinv_g = _solve_kinv(setup, g)                        # (J, N, S)
+    cres = (alpha[..., None] - kinv_g) * setup.mask[:, None, :]
+    lin = jnp.sum(b * cres, axis=(1, 2))
+    kc = jnp.einsum("jnm,jms->jns", setup.k, cres)
+    quad = 0.5 * jnp.sum(rho_slots[:, None, :] * cres * kc, axis=(1, 2))
+    return jnp.sum(obj + lin + quad)
+
+
+@partial(jax.jit, static_argnames=("setup_static", "n_iters", "project"))
+def _run_jit(setup_static, setup_arrays, alpha0, rho1_arr, rho2_arr, n_iters,
+             project):
+    setup = dataclasses.replace(setup_static, **setup_arrays)
+
+    def step(carry, t):
+        alpha, b = carry
+        r1, r2 = rho1_arr[t], rho2_arr[t]
+        alpha_n, b_n, g, _ = admm_iteration(setup, alpha, b, r1, r2, project)
+        # Theorem-2 pairing: L(alpha^t, Z^t, eta^t) with Z^t generated from
+        # (alpha^t, eta^t) — i.e. the *incoming* alpha/b with the g computed
+        # from them inside this iteration.
+        lag = augmented_lagrangian(setup, alpha, b, g, r1, r2)
+        ka = jnp.einsum("jnm,jm->jn", setup.k, alpha_n)
+        res = jnp.sqrt(jnp.sum(setup.mask[:, None, :]
+                               * (ka[..., None] - g) ** 2))
+        return (alpha_n, b_n), (alpha_n, lag, res)
+
+    b0 = jnp.zeros(alpha0.shape + (setup.n_slots,), alpha0.dtype)
+    (alpha, _), (ahist, lhist, rhist) = jax.lax.scan(
+        step, (alpha0, b0), jnp.arange(n_iters))
+    return alpha, ahist, lhist, rhist
+
+
+def initial_alpha(setup: DkpcaSetup, init: str = "paper", seed: int = 0):
+    """alpha^(0).
+
+    "paper": entrywise standard normal, *unnormalized* — the scale matters:
+      ||alpha0|| ~ sqrt(N) puts ||z_hat|| well above 1 so the ball projection
+      (the iteration's only normalization) engages from step one.
+    "local": warm start at the local kPCA solution (v1/sqrt(lam1) of K_j),
+      i.e. each node starts at its own best guess; ||w_j|| = 1 exactly.
+    """
+    if init == "paper":
+        key = jax.random.PRNGKey(seed)
+        return jax.random.normal(key, setup.x.shape[:2], setup.k.dtype)
+    if init == "local":
+        def top(lam, v):
+            return v[:, -1] / jnp.sqrt(jnp.maximum(lam[-1], 1e-12))
+        return jax.vmap(top)(setup.lam, setup.vec)
+    raise ValueError(init)
+
+
+def run_admm(setup: DkpcaSetup, n_iters: int = 30,
+             rho1: float = 100.0,
+             rho2: Optional[RhoSchedule] = None,
+             seed: int = 0,
+             alpha0: Optional[jax.Array] = None,
+             init: str = "paper",
+             project: str = "ball") -> DkpcaResult:
+    """Run Alg. 1. rho2 defaults to the paper's warm-up schedule
+    (10 -> 50 -> 100); pass ``RhoSchedule.constant(auto_rho(...))`` for the
+    Theorem-2 regime. ``project="sphere"`` enables the beyond-paper
+    renormalization that removes the degenerate z=0 attractor."""
+    if rho2 is None:
+        rho2 = RhoSchedule()
+    if alpha0 is None:
+        alpha0 = initial_alpha(setup, init, seed)
+    ts = np.arange(n_iters)
+    rho2_arr = jnp.asarray([rho2.at(t) for t in ts], setup.k.dtype)
+    rho1_arr = jnp.full((n_iters,), rho1, setup.k.dtype) \
+        if setup.include_self else jnp.zeros((n_iters,), setup.k.dtype)
+
+    arrays = {f.name: getattr(setup, f.name)
+              for f in dataclasses.fields(DkpcaSetup)
+              if f.name != "include_self"}
+    static = dataclasses.replace(
+        setup, **{k: None for k in arrays})
+    alpha, ahist, lhist, rhist = _run_jit(
+        static, arrays, alpha0, rho1_arr, rho2_arr, n_iters, project)
+    return DkpcaResult(alpha=alpha, alpha_hist=ahist, lagrangian=lhist,
+                       primal_residual=rhist, rho_hist=rho2_arr)
+
+
+def theorem2_rho(setup: DkpcaSetup, safety: float = 1.05) -> float:
+    """Assumption-2-satisfying constant rho for this setup."""
+    degrees = np.asarray(jnp.sum(setup.mask, axis=1))
+    return auto_rho(np.asarray(setup.lam), degrees, safety)

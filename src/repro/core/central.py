@@ -1,0 +1,41 @@
+"""Central kernel PCA — the paper's ground-truth baseline (problem (2)).
+
+Solves the eigenproblem of the (centered) global Gram matrix; the solution
+``alpha_gt`` is normalized so that ||w*|| = 1 in feature space, i.e.
+||alpha|| = 1/sqrt(lambda_1) (paper §1).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_math import KernelSpec, center_gram, gram, topk_eigh
+
+
+@partial(jax.jit, static_argnames=("spec", "n_components", "center"))
+def central_kpca(x: jax.Array, spec: KernelSpec, n_components: int = 1,
+                 center: bool = True, gamma: Optional[jax.Array] = None):
+    """Central kPCA on the full dataset x: (N, M).
+
+    Returns (alpha, lam, k): alpha (N, n_components) with columns normalized
+    to 1/sqrt(lam_i); lam (n_components,) descending; k the (centered) Gram.
+    """
+    k = gram(spec, x, gamma=gamma)
+    if center:
+        k = center_gram(k)
+    lam, vec = topk_eigh(k, n_components)
+    lam = jnp.maximum(lam, 1e-12)
+    alpha = vec / jnp.sqrt(lam)[None, :]
+    return alpha, lam, k
+
+
+def kpca_project(x_new: jax.Array, x_train: jax.Array, alpha: jax.Array,
+                 spec: KernelSpec, gamma: Optional[jax.Array] = None):
+    """Project new points onto learned components:
+    (w*)^T phi(x') = sum_i alpha_i K(x_i, x')   (paper §1)."""
+    kx = gram(spec, x_new, x_train, gamma=gamma)
+    return kx @ alpha

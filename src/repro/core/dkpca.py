@@ -1,0 +1,251 @@
+"""Distributed (SPMD) decentralized kernel PCA — paper Alg. 1 on a device
+mesh.
+
+Mapping (DESIGN.md §3): network node j == device j on the flattened mesh
+axes; the paper's k-nearest-neighbor ring becomes ``jax.lax.ppermute``
+shifts, i.e. nearest-neighbor hops on the TPU ICI torus. One program runs on
+every node (bulk-synchronous SPMD, exactly the ADMM's communication
+structure):
+
+  setup:  r ppermute hops each direction exchange raw X_j (paper's setup
+          phase); Gram blocks are computed locally (Pallas kernel on TPU);
+          global-centering row-mean statistics use one ring sweep
+          (J ppermute steps) + one pmean — the "consensus averaging round".
+  iterate (lax.scan):
+          2 message rounds per iteration, each 2r ppermutes of N-vectors:
+          (alpha_l, K_l^-1 B_l column)  ->  Z-update (eq. 10-11)
+          (phi(X_l)^T z_j projections)  ->  alpha/eta updates (eq. 12-13)
+
+Per-node per-iteration communication is O(|Omega_j| N) numbers — matching
+the paper's §4.2 cost analysis — and is independent of the network size J.
+
+Fault tolerance: the ring is re-knit around failed nodes by re-launching
+with the survivor mesh (see ``repro.core.topology.reknit`` and
+tests/test_fault_tolerance.py); ADMM state (alpha, B) checkpoints via
+``repro.checkpoint``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .admm import initial_alpha  # noqa: F401  (same init semantics)
+from .kernels_math import KernelSpec, gram, psd_jitter_eigh, resolve_gamma
+from .rho import RhoSchedule
+from .topology import ring_shifts
+
+
+@dataclasses.dataclass
+class DistDkpcaResult:
+    alpha: jax.Array           # (J, N)
+    alpha_hist: jax.Array      # (T, J, N)
+    primal_residual: jax.Array  # (T,)
+    znorm2_hist: jax.Array     # (T, J)
+
+
+def _ring_recv(v, axes, offset: int, j: int):
+    """result[m] = v[(m + offset) % J] over the flattened mesh axes."""
+    perm = [((m + offset) % j, m) for m in range(j)]
+    return jax.lax.ppermute(v, axes, perm)
+
+
+def dkpca_distributed(
+    x_nodes,
+    mesh: Mesh,
+    axis_names: Sequence[str] = ("data", "model"),
+    hops: int = 2,
+    spec: KernelSpec = KernelSpec(),
+    center: str = "global",
+    include_self: bool = True,
+    rho1: float = 100.0,
+    rho2: Optional[RhoSchedule] = None,
+    n_iters: int = 30,
+    seed: int = 0,
+    alpha0: Optional[jax.Array] = None,
+    project: str = "ball",
+    gamma: Optional[float] = None,
+    use_pallas: bool = False,
+    message_dtype=None,
+    unroll_iters: bool = False,
+) -> DistDkpcaResult:
+    """Run decentralized kPCA with one network node per device.
+
+    x_nodes: (J, N, M) with J == prod(mesh axis sizes for axis_names).
+    """
+    axis_names = tuple(axis_names)
+    j_nodes = int(np.prod([mesh.shape[a] for a in axis_names]))
+    x_nodes = jnp.asarray(x_nodes, jnp.float32)
+    jj, n, m = x_nodes.shape
+    assert jj == j_nodes, (jj, j_nodes)
+    assert center in ("global", "none")
+    if rho2 is None:
+        rho2 = RhoSchedule()
+    if gamma is None:
+        g = resolve_gamma(spec, x_nodes.reshape(jj * n, m))
+    else:
+        g = jnp.asarray(gamma, jnp.float32)
+    if alpha0 is None:
+        alpha0 = jax.random.normal(jax.random.PRNGKey(seed), (jj, n),
+                                   jnp.float32)
+    rho2_arr = jnp.asarray([rho2.at(t) for t in range(n_iters)], jnp.float32)
+    rho_self = float(rho1) if include_self else 0.0
+
+    offsets = ring_shifts(hops)                 # [-r..-1, 1..r]
+    s_slots = len(offsets) + 1                  # slot 0 = self
+    # rev_static[d]: for in-slot d (offset o), the sender's out-slot index
+    # pointing back at us = slot of offset -o (in the same 0=self layout).
+    slot_of = {0: 0}
+    slot_of.update({o: i + 1 for i, o in enumerate(offsets)})
+    rev_static = [slot_of[-o] for o in offsets]
+
+    fn = partial(_node_fn, axes=axis_names, j_nodes=j_nodes,
+                 offsets=tuple(offsets), rev_static=tuple(rev_static),
+                 s_slots=s_slots, spec=spec, center=center,
+                 rho_self=rho_self, project=project, n_iters=n_iters,
+                 use_pallas=use_pallas, message_dtype=message_dtype,
+                 unroll_iters=unroll_iters)
+    shmap = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axis_names, None, None), P(axis_names, None), P(), P()),
+        out_specs=(P(axis_names, None), P(None, axis_names, None),
+                   P(None), P(None, axis_names)),
+        # Pallas calls inside the body produce ShapeDtypeStructs without vma
+        # annotations; disable the varying-mesh-axes checker for this map.
+        check_vma=False,
+    )
+    with mesh:
+        alpha, hist, res, zn = jax.jit(shmap)(x_nodes, alpha0, g, rho2_arr)
+    return DistDkpcaResult(alpha=alpha, alpha_hist=hist, primal_residual=res,
+                           znorm2_hist=zn)
+
+
+def _node_fn(x_blk, a_blk, g, rho2_arr, *, axes, j_nodes, offsets, rev_static,
+             s_slots, spec, center, rho_self, project, n_iters, use_pallas,
+             message_dtype=None, unroll_iters=False):
+    """Per-node SPMD program. x_blk: (1, N, M); a_blk: (1, N).
+
+    message_dtype (e.g. jnp.bfloat16): §Perf knob — cast per-iteration
+    ppermute payloads (alpha, K^-1 B columns, z-projections) to a narrower
+    dtype before the wire, halving ICI bytes; accumulation stays fp32."""
+    x = x_blk[0]
+    alpha = a_blk[0]
+    n = x.shape[0]
+
+    def gram_fn(xa, xb):
+        if use_pallas:
+            from ..kernels.gram import gram_op
+            return gram_op(spec, xa, xb, gamma=g)
+        return gram(spec, xa, xb, gamma=g)
+
+    # ---- setup: exchange raw data with r-hop neighbors (paper Alg. 1) ----
+    xs = [x] + [_ring_recv(x, axes, o, j_nodes) for o in offsets]
+    xs = jnp.stack(xs)                                     # (S, N, M)
+
+    # ---- global centering statistics: one ring sweep + pmean -------------
+    if center == "global":
+        def sweep(carry, _):
+            rot, macc, mubar = carry
+            kb = gram_fn(x, rot)                           # (N, N)
+            macc = macc + jnp.sum(kb, axis=1)
+            mubar = mubar + jnp.sum(kb)
+            rot = _ring_recv(rot, axes, 1, j_nodes)
+            return (rot, macc, mubar), None
+
+        zero_n = jax.lax.pvary(jnp.zeros((n,), jnp.float32), axes)
+        zero_s = jax.lax.pvary(jnp.zeros((), jnp.float32), axes)
+        (_, macc, mubar), _ = jax.lax.scan(
+            sweep, (x, zero_n, zero_s), None, length=j_nodes)
+        m_own = macc / (j_nodes * n)                       # m(x) for own rows
+        mu_bar = jax.lax.pmean(mubar / (j_nodes * n * n), axes)
+        m_slots = [m_own] + [_ring_recv(m_own, axes, o, j_nodes)
+                             for o in offsets]
+        m_slots = jnp.stack(m_slots)                       # (S, N)
+    else:
+        m_slots = jnp.zeros((s_slots, n), jnp.float32)
+        mu_bar = jnp.zeros((), jnp.float32)
+
+    # ---- Gram blocks over slot data (Pallas hotspot on TPU) --------------
+    xflat = xs.reshape(s_slots * n, -1)
+    kfull = gram_fn(xflat, xflat)
+    if center == "global":
+        mf = m_slots.reshape(s_slots * n)
+        kfull = kfull - mf[:, None] - mf[None, :] + mu_bar
+    kcross = kfull.reshape(s_slots, n, s_slots, n).transpose(0, 2, 1, 3)
+
+    k_loc = kcross[0, 0]
+    lam, vec = psd_jitter_eigh(k_loc)
+    inv_lam = jnp.where(lam > 1e-5 * lam[-1], 1.0 / lam, 0.0)
+
+    n_nbr = len(offsets)
+    rho_bar_base = rho_self  # + n_nbr * rho2 (per-iteration)
+
+    def iteration(carry, t):
+        alpha, b = carry                                   # (N,), (N, S)
+        rho2 = rho2_arr[t]
+        rho_bar = rho_bar_base + n_nbr * rho2
+
+        # K^-1 B (all slots at once)
+        m1 = vec @ ((vec.T @ b) * inv_lam[:, None])        # (N, S)
+
+        # ---- message round 1: alpha + K^-1 B columns ---------------------
+        def send(v, off):
+            if message_dtype is not None:
+                v = v.astype(message_dtype)
+            r = _ring_recv(v, axes, off, j_nodes)
+            return r.astype(jnp.float32) if message_dtype is not None else r
+
+        recv_m1 = [send(m1[:, rev_static[d]], offsets[d])
+                   for d in range(n_nbr)]
+        recv_a = [send(alpha, offsets[d]) for d in range(n_nbr)]
+        c0 = (m1[:, 0] + rho_self * alpha) / rho_bar
+        c = jnp.stack([c0] + [(recv_m1[d] + rho2 * recv_a[d]) / rho_bar
+                              for d in range(n_nbr)])      # (S, N)
+
+        znorm2 = jnp.einsum("an,abnm,bm->", c, kcross, c)
+        rs = jax.lax.rsqrt(jnp.maximum(znorm2, 1e-30))
+        scale = jnp.where(znorm2 > 1.0, rs, 1.0)
+        p = scale * jnp.einsum("abnm,bm->an", kcross, c)   # (S, N)
+
+        # ---- message round 2: z-projections ------------------------------
+        g_cols = [p[0]] + [send(p[rev_static[d]], offsets[d])
+                           for d in range(n_nbr)]
+        g_mat = jnp.stack(g_cols, axis=1)                  # (N, S)
+
+        # ---- alpha update (eq. 12) ---------------------------------------
+        rho_slots = jnp.concatenate(
+            [jnp.full((1,), rho_self), jnp.full((n_nbr,), rho2)])
+        rhs = jnp.sum(rho_slots[None, :] * g_mat - b, axis=1)
+        den = rho_bar * lam - 2.0 * lam * lam
+        # see admm.py: drop non-PD directions during rho warm-up
+        inv_den = jnp.where((lam > 1e-5 * lam[-1]) & (den > 0),
+                            1.0 / den, 0.0)
+        alpha_n = vec @ ((vec.T @ rhs) * inv_den)
+
+        # ---- eta update (eq. 13) -----------------------------------------
+        ka = k_loc @ alpha_n
+        b_n = b + rho_slots[None, :] * (ka[:, None] - g_mat)
+        if rho_self == 0.0:
+            b_n = b_n.at[:, 0].set(0.0)
+
+        res2 = jax.lax.psum(jnp.sum((ka[:, None] - g_mat) ** 2
+                                    * (rho_slots[None, :] > 0)), axes)
+
+        if project == "rescale":
+            zmax = jnp.sqrt(jnp.maximum(
+                jax.lax.pmax(znorm2, axes), 1e-30))
+            gain = jnp.where(zmax < 1.0, 1.0 / zmax, 1.0)
+            alpha_n = alpha_n * gain
+            b_n = b_n * gain
+        return (alpha_n, b_n), (alpha_n, jnp.sqrt(res2), znorm2)
+
+    b0 = jax.lax.pvary(jnp.zeros((n, s_slots), jnp.float32), axes)
+    (alpha_f, _), (ahist, rhist, znhist) = jax.lax.scan(
+        iteration, (alpha, b0), jnp.arange(n_iters), unroll=unroll_iters)
+    return (alpha_f[None], ahist[:, None, :], rhist, znhist[:, None])

@@ -1,0 +1,37 @@
+"""Local baselines from the paper's experiments (§6.2).
+
+- (alpha_j)_local : kPCA on the node's own data only (Fig 4 baseline).
+- (alpha_j)_Nei   : kPCA on the union of the node's and its neighbors' data
+                    (Fig 5 black line), evaluated on the node's own samples.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .central import central_kpca
+from .kernels_math import KernelSpec
+from .topology import Graph
+
+
+def local_kpca(x_nodes, spec: KernelSpec, n_components: int = 1, gamma=None):
+    """x_nodes: (J, N, M) -> per-node local solutions alpha (J, N, C)."""
+    import jax
+    fn = lambda x: central_kpca(x, spec, n_components, gamma=gamma)[0]
+    return jax.vmap(fn)(x_nodes)
+
+
+def neighborhood_kpca(x_nodes, graph: Graph, spec: KernelSpec,
+                      n_components: int = 1, gamma=None):
+    """(alpha_j)_Nei: for each node, run kPCA on [X_j, X_{Omega_j}] and keep
+    the coefficients of node j's own samples (the direction is then
+    phi([X_j X_nbr]) alpha_full, evaluated exactly; for the similarity metric
+    we return the full coefficient vector plus the stacked data)."""
+    n = x_nodes.shape[1]
+    out = []
+    for j in range(graph.n_nodes):
+        ids = [j] + list(graph.nbr[j])
+        xcat = jnp.concatenate([x_nodes[i] for i in ids], axis=0)
+        alpha, _, _ = central_kpca(xcat, spec, n_components, gamma=gamma)
+        out.append((alpha, xcat))
+    return out

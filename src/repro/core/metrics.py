@@ -1,0 +1,65 @@
+"""Similarity metric from the paper's §6.1.
+
+Similarity(w_j, w_gt) = w_j^T w_gt / (||w_j|| ||w_gt||)
+  = alpha_j^T K(X_j, X) alpha_gt / sqrt((alpha_j^T K_j alpha_j)(alpha_gt^T K alpha_gt))
+
+computed entirely in the dual. Eigenvector sign is arbitrary, so we report
+|similarity| (the paper's plots are all positive).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .kernels_math import KernelSpec, center_gram, center_gram_global, gram
+
+
+def similarity(alpha_j: jnp.ndarray, x_j: jnp.ndarray,
+               alpha_gt: jnp.ndarray, x_gt: jnp.ndarray,
+               spec: KernelSpec, center: bool = True,
+               gamma: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Cosine similarity of w_j = phi(X_j) alpha_j and w = phi(X) alpha_gt."""
+    k_j = gram(spec, x_j, gamma=gamma)
+    k_g = gram(spec, x_gt, gamma=gamma)
+    k_cross = gram(spec, x_j, x_gt, gamma=gamma)
+    if center:
+        # Center every block consistently w.r.t. the global dataset so that
+        # all vectors live in the same (centered) feature space.
+        k_cross = center_gram_global(k_cross, k_cross, k_g, k_g)
+        k_j = center_gram(k_j)
+        k_g = center_gram(k_g)
+    num = alpha_j @ k_cross @ alpha_gt
+    den = jnp.sqrt(jnp.maximum((alpha_j @ k_j @ alpha_j)
+                               * (alpha_gt @ k_g @ alpha_gt), 1e-24))
+    return jnp.clip(jnp.abs(num) / den, 0.0, 1.0)
+
+
+def pairwise_direction_similarity(alpha_a, x_a, alpha_b, x_b, spec,
+                                  gamma=None, center: bool = True):
+    """Similarity between two dual-represented directions on different data."""
+    return similarity(alpha_a, x_a, alpha_b, x_b, spec, center=center,
+                      gamma=gamma)
+
+
+def subspace_alignment(alphas_j, x_j, alphas_gt, x_gt, spec, gamma=None):
+    """Mean principal angle cosine between two k-dim component subspaces
+    (used by the beyond-paper top-k deflation). alphas: (N, k)."""
+    k_cross = gram(spec, x_j, x_gt, gamma=gamma)
+    k_j = gram(spec, x_j, gamma=gamma)
+    k_g = gram(spec, x_gt, gamma=gamma)
+    # Gram-normalize each side, then SVD of the cross-correlation.
+    aj = _orthonormalize(alphas_j, k_j)
+    ag = _orthonormalize(alphas_gt, k_g)
+    c = aj.T @ k_cross @ ag
+    s = jnp.linalg.svd(c, compute_uv=False)
+    return jnp.mean(jnp.clip(s, 0.0, 1.0))
+
+
+def _orthonormalize(alpha, k):
+    """Make columns of phi(X) alpha orthonormal: alpha^T K alpha = I."""
+    m = alpha.T @ k @ alpha
+    lam, v = jnp.linalg.eigh(m)
+    lam = jnp.maximum(lam, 1e-12)
+    return alpha @ v / jnp.sqrt(lam)[None, :]

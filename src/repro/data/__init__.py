@@ -1,0 +1,3 @@
+from .synthetic import distribute, kpca_dataset, node_dataset
+
+__all__ = ["distribute", "kpca_dataset", "node_dataset"]

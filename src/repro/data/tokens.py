@@ -1,0 +1,55 @@
+"""Deterministic synthetic token stream for LM training.
+
+Checkpointable: the full iterator state is (seed, step). Batches are a
+function of (seed, step) only — restart-resume reproduces the exact stream
+(tested), and generation is independent of the device layout.
+
+The stream has learnable structure (a random order-1 Markov chain over the
+vocab) so small-model training loss decreases visibly below log(V)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab: int
+    batch: int
+    seq: int
+    seed: int = 0
+    step: int = 0
+    markov_states: int = 64
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # sparse-ish transition structure mapped into the vocab
+        self._trans = rng.integers(0, self.vocab,
+                                   size=(self.markov_states, 4),
+                                   dtype=np.int64)
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    def restore(self, state: dict):
+        self.seed = state["seed"]
+        self.step = state["step"]
+
+    def next_batch(self) -> dict:
+        rng = np.random.default_rng((self.seed << 20) ^ self.step)
+        b, s = self.batch, self.seq
+        starts = rng.integers(0, self.markov_states, size=(b,))
+        choices = rng.integers(0, 4, size=(b, s))
+        toks = np.zeros((b, s), np.int64)
+        state = starts
+        for t in range(s):
+            toks[:, t] = self._trans[state, choices[:, t]]
+            state = toks[:, t] % self.markov_states
+        self.step += 1
+        toks = toks.astype(np.int32)
+        return {"tokens": jnp.asarray(toks),
+                "labels": jnp.asarray(np.roll(toks, -1, axis=1))}

@@ -1,0 +1,3 @@
+from .sharding import Rules, default_rules, sharding_for, spec_for
+
+__all__ = ["Rules", "default_rules", "sharding_for", "spec_for"]

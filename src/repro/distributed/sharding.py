@@ -1,0 +1,100 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallbacks.
+
+Every parameter is created with a tuple of *logical* axis names (see
+``repro.models.common.ParamCollector``); a per-config rule table maps logical
+axes to physical mesh axes. ``spec_for`` resolves the PartitionSpec for a
+concrete shape, skipping any mapping whose mesh-axis size does not divide the
+dimension (jax requires input shardings to divide evenly) and never using one
+mesh axis twice within a tensor.
+
+Conventions:
+  batch   -> ("pod", "data") on the multi-pod mesh, ("data",) per pod
+  heads / kv_heads / mlp / expert / vocab -> "model"   (tensor parallelism)
+  embed / embed_out -> "data" [+"pod"]                 (FSDP weight shard)
+  cache_seq -> "model"    (context-parallel decode: KV cache sharded along
+                           sequence; softmax/contractions over the sharded
+                           axis become psum-style partial reductions under
+                           GSPMD, which is exactly flash-decode's math)
+  layers / stack / conv / state -> None
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, MeshAxes]
+
+
+def default_rules(multi_pod: bool) -> Rules:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    fsdp = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": None,
+        "embed": fsdp,          # FSDP: weights gathered per layer on use
+        "embed_nofsdp": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "expert": "model",
+        "expert_mlp": None,
+        "vocab": "model",
+        "layers": None,
+        "stack": None,
+        "kv_lora": None,
+        "q_lora": None,
+        "rope": None,
+        "conv": None,
+        "state": None,
+        "inner": "model",       # mamba d_inner
+        "cache_batch": batch,
+        "cache_seq": "model",
+        "cache_heads": None,
+        "act_embed": None,      # activations replicated over model by default
+    }
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             rules: Rules, mesh: Mesh) -> P:
+    """Resolve a PartitionSpec; drop mappings that don't divide or reuse."""
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        axes = rules.get(name) if name is not None else None
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        if any(a in used for a in ax_tuple):
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, ax_tuple) != 0:
+            out.append(None)  # divisibility fallback: replicate
+            continue
+        used.update(ax_tuple)
+        out.append(axes)
+    return P(*out)
+
+
+def sharding_for(shape, logical, rules, mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical, rules, mesh))
+
+
+def tree_shardings(specs: Dict[str, Tuple[Optional[str], ...]],
+                   shapes: Dict[str, Tuple[int, ...]],
+                   rules: Rules, mesh: Mesh) -> Dict[str, NamedSharding]:
+    return {k: sharding_for(shapes[k], specs[k], rules, mesh) for k in specs}

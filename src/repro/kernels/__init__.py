@@ -1,0 +1,12 @@
+# Pallas TPU kernels for the paper's compute hot spots. Each subpackage has
+# <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public wrapper with
+# padding/dispatch) and ref.py (pure-jnp oracle used by the allclose tests).
+# On non-TPU backends the wrappers run the kernels in interpret mode.
+from .gram import gram_op, gram_reference
+from .centering import center_op, center_reference
+from .admm_step import admm_local_update_op, admm_local_update_reference
+
+__all__ = [
+    "gram_op", "gram_reference", "center_op", "center_reference",
+    "admm_local_update_op", "admm_local_update_reference",
+]

@@ -1,0 +1,22 @@
+"""Jitted wrapper for the fused ADMM local update kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..gram.ops import _on_tpu
+from .admm_step import admm_local_update
+
+
+def admm_local_update_op(v, inv_den, k, b, g, rho_slots,
+                         interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = v.shape[-1]
+    if n > 1024:
+        raise ValueError(
+            f"admm_step kernel keeps V and K (2 x {n}^2 fp32) resident in "
+            "VMEM; N_j > 1024 exceeds the 16 MB budget — fall back to the "
+            "jnp reference (repro.kernels.admm_step.ref)")
+    return admm_local_update(v, inv_den, k, b, g, rho_slots,
+                             interpret=interpret)

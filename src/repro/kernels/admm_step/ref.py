@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused local ADMM update."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def admm_local_update_reference(v, inv_den, k, b, g, rho_slots):
+    """Same contract as ops.admm_local_update_op (J-batched)."""
+    rhs = jnp.sum(rho_slots * g - b, axis=2, keepdims=True)      # (J, N, 1)
+    t = jnp.einsum("jnm,jn1->jm1", v, rhs) * inv_den
+    alpha = jnp.einsum("jnm,jm1->jn1", v, t)
+    ka = jnp.einsum("jnm,jm1->jn1", k, alpha)
+    b_new = b + rho_slots * (ka - g)
+    return alpha, b_new

@@ -1,0 +1,4 @@
+from .ops import center_op
+from .ref import center_reference
+
+__all__ = ["center_op", "center_reference"]

@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: fused Gram-matrix centering (paper §6.1).
+
+K_c = K - rowmean - colmean + totalmean, tiled so each output block is read
+and written exactly once (single HBM pass; the naive jnp version makes XLA
+materialize broadcasted mean matrices under some fusion decisions). Means
+are cheap O(n^2) reductions computed by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _center_kernel(row_ref, col_ref, tot_ref, k_ref, o_ref):
+    r = row_ref[...].astype(jnp.float32)     # (bn,) row means
+    c = col_ref[...].astype(jnp.float32)     # (bk,) col means
+    o_ref[...] = (k_ref[...].astype(jnp.float32)
+                  - r[:, None] - c[None, :] + tot_ref[0])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
+def center_tiles(k: jax.Array, row_mean: jax.Array, col_mean: jax.Array,
+                 tot_mean: jax.Array, *, block_n: int = 256,
+                 block_k: int = 256, interpret: bool = False) -> jax.Array:
+    n, m = k.shape
+    assert n % block_n == 0 and m % block_k == 0
+    grid = (n // block_n, m // block_k)
+    return pl.pallas_call(
+        _center_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((block_n, block_k), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_k), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(row_mean, col_mean, tot_mean, k)

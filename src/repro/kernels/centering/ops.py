@@ -1,0 +1,31 @@
+"""Jitted wrapper for the centering Pallas kernel (padding + dispatch)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..gram.ops import _on_tpu, _pad_to, _round_up
+from .centering import center_tiles
+
+
+def center_op(k: jax.Array, block: int = 256,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """Fused K_c = K - rowmean - colmean + totalmean (paper §6.1 formula)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, m = k.shape
+    kf = k.astype(jnp.float32)
+    row = jnp.mean(kf, axis=1)
+    col = jnp.mean(kf, axis=0)
+    tot = jnp.mean(kf)[None]
+    bn = min(block, _round_up(n, 8))
+    bk = min(block, _round_up(m, 128))
+    kp = _pad_to(_pad_to(kf, bn, 0), bk, 1)
+    rp = _pad_to(row, bn, 0)
+    cp = _pad_to(col, bk, 0)
+    out = center_tiles(kp, rp, cp, tot, block_n=bn, block_k=bk,
+                       interpret=interpret)
+    return out[:n, :m]

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the centering kernel."""
+
+from ...core.kernels_math import center_gram as center_reference  # noqa: F401

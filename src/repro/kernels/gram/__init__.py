@@ -1,0 +1,4 @@
+from .ops import gram_op
+from .ref import gram_reference
+
+__all__ = ["gram_op", "gram_reference"]

@@ -1,0 +1,71 @@
+"""Jitted public wrapper around the Gram Pallas kernel.
+
+Handles padding to block multiples (zero-padding the feature axis is exact:
+dot products and squared norms are unchanged; padded rows/cols are sliced
+off), self-kernel/sq-norm precomputation, gamma resolution and backend
+dispatch (interpret=True everywhere except real TPU)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.kernels_math import KernelSpec, resolve_gamma, _self_k
+from .gram import gram_tiles
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(a: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def gram_op(spec: KernelSpec, x: jax.Array, y: Optional[jax.Array] = None,
+            gamma: Optional[jax.Array] = None,
+            block_n: int = 128, block_k: int = 128, block_m: int = 512,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Gram matrix K[i, j] = K(x_i, y_j) via the Pallas kernel.
+
+    Matches ``repro.kernels.gram.ref.gram_reference`` (tested across shapes
+    and dtypes in tests/test_kernels_gram.py).
+    """
+    if y is None:
+        y = x
+    if interpret is None:
+        interpret = not _on_tpu()
+    if spec.kind == "rbf":
+        g = resolve_gamma(spec, x) if gamma is None else jnp.asarray(gamma)
+        sx = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+        sy = jnp.sum(y.astype(jnp.float32) ** 2, axis=-1)
+    else:
+        g = jnp.zeros((), jnp.float32)
+        sx = _self_k(spec, x.astype(jnp.float32))
+        sy = _self_k(spec, y.astype(jnp.float32))
+    n, k = x.shape[0], y.shape[0]
+    # adapt block sizes for small problems (interpret/test shapes)
+    bn = min(block_n, _round_up(n, 8))
+    bk = min(block_k, _round_up(k, 8))
+    bm = min(block_m, _round_up(x.shape[1], 128))
+    xp = _pad_to(_pad_to(x, bm, 1), bn, 0)
+    yp = _pad_to(_pad_to(y, bm, 1), bk, 0)
+    sxp = _pad_to(sx, bn, 0)
+    syp = _pad_to(sy, bk, 0)
+    out = gram_tiles(xp, yp, sxp, syp, jnp.reshape(g, (1,)).astype(jnp.float32),
+                     kind=spec.kind, degree=spec.degree, coef=spec.coef,
+                     scale=spec.scale, normalize=spec.normalize,
+                     block_n=bn, block_k=bk, block_m=bm, interpret=interpret)
+    return out[:n, :k]
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the Gram Pallas kernel — delegates to the core math
+module (single source of numerical truth)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from ...core.kernels_math import KernelSpec, gram
+
+
+def gram_reference(spec: KernelSpec, x: jax.Array,
+                   y: Optional[jax.Array] = None,
+                   gamma: Optional[jax.Array] = None) -> jax.Array:
+    return gram(spec, x, y, gamma=gamma)

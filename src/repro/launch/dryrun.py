@@ -1,0 +1,592 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the production mesh from 512
+# placeholder host devices; smoke tests and benches see the default 1.
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input shape)
+cell on the single-pod (16,16) mesh AND the multi-pod (2,16,16) mesh,
+recording memory analysis, FLOPs/bytes, and the collective schedule for the
+roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k --multipod both --out results/dryrun.json
+
+Results are written incrementally (--resume skips completed cells) — the
+dry-run itself is restartable, like everything else in this repo."""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import (ARCH_NAMES, SHAPES, applicable, get_config,  # noqa: E402
+                       train_batch_specs)
+from ..distributed.sharding import default_rules, spec_for  # noqa: E402
+from ..models import build_model  # noqa: E402
+from ..models.common import abstract_params  # noqa: E402
+from ..optim import AdamWConfig, adamw_update  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+# dtype byte sizes for HLO shape strings like f32[16,512]{1,0}
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+             "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+             "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _hlo_collective_bytes(hlo_text: str):
+    """Sum OUTPUT operand bytes of every collective op in the (per-device)
+    SPMD module, grouped by op kind. Conservative wire model documented in
+    EXPERIMENTS.md §Roofline."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*([\w\[\](){},\s]*?)\s"
+                      r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            if dt not in _DT_BYTES:
+                continue
+            size = 1
+            for d in dims.split(","):
+                if d:
+                    size *= int(d)
+            nbytes += size * _DT_BYTES[dt]
+        d = out.setdefault(kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+    return out
+
+
+def _shardings_tree(shapes, axes, rules, mesh):
+    return {k: NamedSharding(mesh, spec_for(shapes[k].shape, axes[k], rules,
+                                            mesh))
+            for k in shapes}
+
+
+def _with_sharding(sds, sharding):
+    return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sharding)
+
+
+def _batch_shardings(batch_specs, rules, mesh):
+    out = {}
+    for k, v in batch_specs.items():
+        dims = [rules["batch"]] + [None] * (len(v.shape) - 1)
+        out[k] = _with_sharding(v, NamedSharding(mesh, P(*dims)))
+    return out
+
+
+def _cache_sharded(cache_abstract, cfg, rules, mesh):
+    """Heuristic cache shardings: batch dim -> data axes; the longest
+    (sequence/state) dim -> 'model' when divisible (context-parallel
+    decode); everything else replicated."""
+    batch_axes = rules["batch"]
+
+    def shard_one(sds):
+        shape = sds.shape
+        spec = [None] * len(shape)
+        # batch: stacked caches are (L, B, ...); enc_out is (B, ...)
+        bdim = 1 if len(shape) >= 3 else 0
+        bsz = int(np.prod([mesh.shape[a] for a in
+                           ((batch_axes,) if isinstance(batch_axes, str)
+                            else batch_axes)]))
+        if shape[bdim] % bsz == 0:
+            spec[bdim] = batch_axes
+        # longest remaining dim -> model (KV seq / d_inner)
+        rest = [(d, i) for i, d in enumerate(shape) if i != bdim]
+        if rest:
+            d, i = max(rest)
+            if d % mesh.shape["model"] == 0 and d >= mesh.shape["model"]:
+                spec[i] = "model"
+        return _with_sharding(sds, NamedSharding(mesh, P(*spec)))
+
+    return jax.tree.map(shard_one, cache_abstract)
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    error: str = ""
+    compile_s: float = 0.0
+    flops_per_device: float = 0.0
+    bytes_accessed_per_device: float = 0.0
+    argument_bytes: int = 0
+    output_bytes: int = 0
+    temp_bytes: int = 0
+    peak_bytes: int = 0
+    alias_bytes: int = 0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    n_devices: int = 0
+    n_params: float = 0.0
+    n_active_params: float = 0.0
+    # raw (full-depth compile) numbers: XLA's cost model counts a while-loop
+    # (scan) body ONCE, so these undercount by ~n_layers; the headline
+    # flops/bytes/collectives fields are depth-extrapolated (see
+    # _depth_extrapolate) which is exact for scanned layer stacks.
+    flops_raw: float = 0.0
+    bytes_raw: float = 0.0
+    collectives_raw: dict = dataclasses.field(default_factory=dict)
+    depth_points: list = dataclasses.field(default_factory=list)
+
+
+def depth_pair(cfg):
+    """Two reduced depths for linear cost extrapolation (exact for scanned
+    stacks; <1% error for the hybrid tail)."""
+    if cfg.attn_every > 0:                       # hybrid: whole groups
+        return (cfg.attn_every, 2 * cfg.attn_every)
+    fkd = cfg.first_k_dense
+    return (fkd + 2, fkd + 4)
+
+
+def scale_depth(cfg, n_layers: int):
+    """Cost variant: reduced depth + every internal scan unrolled so the XLA
+    cost model sees all iterations."""
+    upd = {"n_layers": n_layers, "unroll_scans": True}
+    if cfg.is_encdec:
+        upd["n_enc_layers"] = n_layers           # seamless: enc == dec == 24
+    return dataclasses.replace(cfg, **upd)
+
+
+def seq_points(cfg, shape):
+    """Three token lengths for the quadratic seq fit — aligned to attention
+    chunk (1024) and ssm chunk granularity, above the VLM frontend prefix.
+    Mamba archs use shorter points: their cost variants unroll the per-chunk
+    time scans, and seq/64 unrolled SSD bodies at 4096 tokens make XLA
+    compile times explode; the quadratic fit is length-invariant."""
+    if os.environ.get("REPRO_SEQ_PTS"):
+        pts = tuple(int(x) for x in os.environ["REPRO_SEQ_PTS"].split(","))
+    elif cfg.mamba_version:
+        pts = (128, 192, 256)
+    elif cfg.family == "vlm" and cfg.frontend_seq:
+        pts = (2048, 3072, 4096)
+    else:
+        pts = (1024, 2048, 4096)
+    return tuple(min(p, shape.seq) for p in pts) \
+        if shape.seq >= pts[-1] else (shape.seq,) * 3
+
+
+def _lin(l1, f1, l2, f2, full):
+    """Linear extrapolation f(L) = f1 + (f2-f1)*(L-L1)/(L2-L1)."""
+    return f1 + (f2 - f1) * (full - l1) / max(l2 - l1, 1)
+
+
+def resolve_cfg(arch: str, shape_name: str, attention_impl: str = None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    if attention_impl:
+        cfg = dataclasses.replace(cfg, attention_impl=attention_impl)
+    elif shape.kind == "prefill":
+        # memory-bounded flash-style attention for long prefill (baseline
+        # serving-stack choice; see EXPERIMENTS.md §Perf)
+        cfg = dataclasses.replace(cfg, attention_impl="chunked")
+    return cfg, shape
+
+
+def prepare_cell(arch: str, shape_name: str, multi_pod: bool,
+                 attention_impl: str = None, rules_overrides: dict = None,
+                 cfg=None, seq: int = None):
+    """Build (lower_fn) for one cell; returns a thunk that lowers+compiles."""
+    cfg_r, shape = resolve_cfg(arch, shape_name, attention_impl)
+    if cfg is None:
+        cfg = cfg_r
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(multi_pod)
+    if rules_overrides:
+        rules.update(rules_overrides)
+    for k, v in cfg.sharding_overrides:
+        rules[k] = v
+    model = build_model(cfg, mesh=mesh)
+
+    pshapes, paxes = abstract_params(
+        lambda k: model.init(k), jax.random.PRNGKey(0))
+    psh = _shardings_tree(pshapes, paxes, rules, mesh)
+    params_abs = {k: _with_sharding(v, psh[k]) for k, v in pshapes.items()}
+
+    if shape.kind == "train":
+        batch_abs = _batch_shardings(train_batch_specs(cfg, shape, seq=seq),
+                                     rules, mesh)
+        opt_cfg = AdamWConfig()
+
+        def train_step(state, batch):
+            def loss_fn(p):
+                return model.loss(p, batch)
+            (loss, _), grads = jax.value_and_grad(loss_fn,
+                                                  has_aux=True)(
+                state["params"])
+            new_p, opt, _ = adamw_update(opt_cfg, state["params"], grads, {
+                "m": state["m"], "v": state["v"], "step": state["step"]})
+            return {"params": new_p, "m": opt["m"], "v": opt["v"],
+                    "step": opt["step"]}, loss
+
+        fstate = {
+            "params": params_abs,
+            "m": {k: _with_sharding(jax.ShapeDtypeStruct(v.shape,
+                                                         jnp.float32),
+                                    psh[k]) for k, v in pshapes.items()},
+            "v": {k: _with_sharding(jax.ShapeDtypeStruct(v.shape,
+                                                         jnp.float32),
+                                    psh[k]) for k, v in pshapes.items()},
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        fn = jax.jit(train_step, donate_argnums=(0,))
+        args = (fstate, batch_abs)
+    elif shape.kind == "prefill":
+        batch_abs = _batch_shardings(train_batch_specs(cfg, shape, seq=seq),
+                                     rules, mesh)
+        cache_len_target = seq or shape.seq
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, max_len=cache_len_target)
+
+        fn = jax.jit(prefill_step)
+        args = (params_abs, batch_abs)
+    else:  # decode
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(shape.batch, shape.seq))
+        cache_abs = _cache_sharded(cache_abs, cfg, rules, mesh)
+        ba = rules["batch"]
+        dp = int(np.prod([mesh.shape[a] for a in
+                          ((ba,) if isinstance(ba, str) else ba)]))
+        tok_spec = P(ba, None) if shape.batch % dp == 0 else P(None, None)
+        tokens_abs = _with_sharding(
+            jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32),
+            NamedSharding(mesh, tok_spec))
+        clen = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, cache, tokens, cache_len):
+            return model.decode_step(params, cache, tokens, cache_len)
+
+        fn = jax.jit(serve_step, donate_argnums=(1,))
+        args = (params_abs, cache_abs, tokens_abs, clen)
+    return cfg, mesh, fn, args
+
+
+class SkipCell(Exception):
+    pass
+
+
+def _compile_cost(arch, shape_name, multi_pod, cfg, seq=None, **kw):
+    """Compile one config variant; return (flops, bytes, collectives)."""
+    _, mesh, fn, args = prepare_cell(arch, shape_name, multi_pod, cfg=cfg,
+                                     seq=seq, **kw)
+    compiled = fn.lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            _hlo_collective_bytes(compiled.as_text()))
+
+
+def _collect_kind(c, kind, field):
+    return c.get(kind, {field: 0})[field]
+
+
+def _fit_cell(arch, shape_name, cfg, shape, **kw):
+    """cost(L, S) = alpha(S) + L*beta(S), alpha/beta quadratic in S.
+    Returns (flops, bytes, collectives) at (n_layers, shape.seq).
+
+    Mamba archs (cost ~ linear in S; zamba2's shared-attn fraction is the
+    only quadratic part, <5% of FLOPs) use a fast path: depth extrapolation
+    at ONE small seq + linear seq scaling — their unrolled chunk-scan cost
+    variants otherwise take many minutes of XLA compile each."""
+    l1, l2 = depth_pair(cfg)
+    if cfg.mamba_version:
+        s0 = min(256, shape.seq)
+        (f1, b1, c1) = _compile_cost(arch, shape_name, False,
+                                     scale_depth(cfg, l1), seq=s0, **kw)
+        (f2, b2, c2) = _compile_cost(arch, shape_name, False,
+                                     scale_depth(cfg, l2), seq=s0, **kw)
+        full = cfg.n_layers
+        scale = shape.seq / s0
+        flops = max(0.0, _lin(l1, f1, l2, f2, full)) * scale
+        nbytes = max(0.0, _lin(l1, b1, l2, b2, full)) * scale
+        colls = {}
+        for kind in set(c1) | set(c2):
+            colls[kind] = {
+                "bytes": max(0.0, _lin(
+                    l1, _collect_kind(c1, kind, "bytes"),
+                    l2, _collect_kind(c2, kind, "bytes"), full)) * scale,
+                "count": max(0.0, _lin(
+                    l1, _collect_kind(c1, kind, "count"),
+                    l2, _collect_kind(c2, kind, "count"), full)),
+            }
+        return flops, nbytes, colls, [[l1, f1], [l2, f2]]
+    s_pts = seq_points(cfg, shape)
+    full_l, full_s = cfg.n_layers, shape.seq
+    rows = {}
+    for ld in (l1, l2):
+        for sq in sorted(set(s_pts)):
+            rows[(ld, sq)] = _compile_cost(arch, shape_name, False,
+                                           scale_depth(cfg, ld), seq=sq,
+                                           **kw)
+
+    def fit(get):
+        if len(set(s_pts)) == 1:
+            f1 = get(rows[(l1, s_pts[0])])
+            f2 = get(rows[(l2, s_pts[0])])
+            return _lin(l1, f1, l2, f2, full_l)
+        alphas, betas = [], []
+        ss = sorted(set(s_pts))
+        for sq in ss:
+            f1 = get(rows[(l1, sq)])
+            f2 = get(rows[(l2, sq)])
+            beta = (f2 - f1) / (l2 - l1)
+            alphas.append(f1 - l1 * beta)
+            betas.append(beta)
+        pa = np.polyfit(ss, alphas, 2)
+        pb = np.polyfit(ss, betas, 2)
+        return float(np.polyval(pa, full_s)
+                     + full_l * np.polyval(pb, full_s))
+
+    flops = max(0.0, fit(lambda c: c[0]))
+    nbytes = max(0.0, fit(lambda c: c[1]))
+    kinds = set()
+    for c in rows.values():
+        kinds |= set(c[2])
+    colls = {k: {"bytes": max(0.0, fit(lambda c, k=k: _collect_kind(c[2], k, "bytes"))),
+                 "count": max(0.0, fit(lambda c, k=k: _collect_kind(c[2], k, "count")))}
+             for k in kinds}
+    return flops, nbytes, colls, [[l, s] for (l, s) in rows]
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             extrapolate: bool = True, **kw) -> CellResult:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    res = CellResult(arch=arch, shape=shape_name, mesh=mesh_name, ok=False)
+    try:
+        cfg, mesh, fn, args = prepare_cell(arch, shape_name, multi_pod, **kw)
+        res.n_devices = int(np.prod(list(mesh.shape.values())))
+        res.n_params = float(cfg.n_params())
+        res.n_active_params = float(cfg.active_params())
+        t0 = time.time()
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        res.compile_s = time.time() - t0
+        ca = compiled.cost_analysis() or {}
+        res.flops_raw = float(ca.get("flops", 0.0))
+        res.bytes_raw = float(ca.get("bytes accessed", 0.0))
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            res.argument_bytes = int(ma.argument_size_in_bytes)
+            res.output_bytes = int(ma.output_size_in_bytes)
+            res.temp_bytes = int(ma.temp_size_in_bytes)
+            res.peak_bytes = int(getattr(ma, "peak_memory_in_bytes", 0))
+            res.alias_bytes = int(ma.alias_size_in_bytes)
+        res.collectives_raw = _hlo_collective_bytes(compiled.as_text())
+        del compiled, lowered
+
+        if extrapolate:
+            # XLA counts while-loop bodies once: compile reduced variants
+            # with unrolled scans and fit cost(L, S) = alpha(S) + L*beta(S)
+            # (quadratic alpha/beta in S — exact for this workload family).
+            shape = SHAPES[shape_name]
+            kw_fit = {k: v for k, v in kw.items() if k != "cfg"}
+            if shape.kind in ("train", "prefill"):
+                flops, nbytes, colls, pts = _fit_cell(
+                    arch, shape_name, cfg, shape, **kw_fit)
+            else:  # decode: cost linear in cache length already at full T;
+                #    only the layer scans need unrolled-depth extrapolation
+                l1, l2 = depth_pair(cfg)
+                (f1, b1, c1) = _compile_cost(arch, shape_name, multi_pod,
+                                             scale_depth(cfg, l1), **kw_fit)
+                (f2, b2, c2) = _compile_cost(arch, shape_name, multi_pod,
+                                             scale_depth(cfg, l2), **kw_fit)
+                full = cfg.n_layers
+                flops = _lin(l1, f1, l2, f2, full)
+                nbytes = _lin(l1, b1, l2, b2, full)
+                colls = {}
+                for kind in set(c1) | set(c2):
+                    colls[kind] = {
+                        "bytes": max(0.0, _lin(
+                            l1, _collect_kind(c1, kind, "bytes"),
+                            l2, _collect_kind(c2, kind, "bytes"), full)),
+                        "count": max(0.0, _lin(
+                            l1, _collect_kind(c1, kind, "count"),
+                            l2, _collect_kind(c2, kind, "count"), full)),
+                    }
+                pts = [[l1, f1], [l2, f2]]
+            res.depth_points = pts
+            res.flops_per_device = flops
+            res.bytes_accessed_per_device = nbytes
+            res.collectives = colls
+        else:
+            res.flops_per_device = res.flops_raw
+            res.bytes_accessed_per_device = res.bytes_raw
+            res.collectives = res.collectives_raw
+        res.ok = True
+    except SkipCell as e:
+        res.error = f"SKIP: {e}"
+    except Exception as e:  # noqa: BLE001 — a failed cell is a recorded bug
+        res.error = f"{type(e).__name__}: {e}\n{traceback.format_exc()[-2000:]}"
+    return res
+
+
+def run_dkpca_cell(multi_pod: bool, n_per_node: int = 512, m_dim: int = 784,
+                   hops: int = 2, use_pallas: bool = False,
+                   center: str = "global", message_dtype=None,
+                   tag: str = "") -> CellResult:
+    """The paper's own workload on the production mesh: one network node per
+    chip (J = 256 or 512), ring = ICI collective_permutes.
+
+    Per-ADMM-iteration costs are extracted by lowering with n_iters = 2 and
+    4 and differencing (the iteration loop is a scan; XLA costs its body
+    once). MODEL-flops analog: the analytic per-iteration flop count of
+    Alg. 1 (matmul chain of eq. 10-13)."""
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    res = CellResult(arch="dkpca-paper" + tag,
+                     shape=f"N{n_per_node}xM{m_dim}",
+                     mesh=mesh_name, ok=False)
+    try:
+        from ..core.dkpca import dkpca_distributed
+        from ..core.kernels_math import KernelSpec
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        axes = mesh.axis_names
+        j = int(np.prod(list(mesh.shape.values())))
+        res.n_devices = j
+        spec = KernelSpec(kind="rbf", gamma=1e-3)
+
+        def lower_iters(n_iters):
+            def fn(x, alpha0):
+                r = dkpca_distributed(
+                    x, mesh, axes, hops=hops, spec=spec, center=center,
+                    n_iters=n_iters, alpha0=alpha0, gamma=1e-3,
+                    use_pallas=use_pallas, message_dtype=message_dtype,
+                    unroll_iters=True)
+                return r.alpha, r.primal_residual
+            x_abs = jax.ShapeDtypeStruct((j, n_per_node, m_dim), jnp.float32)
+            a_abs = jax.ShapeDtypeStruct((j, n_per_node), jnp.float32)
+            return jax.jit(fn).lower(x_abs, a_abs).compile()
+
+        t0 = time.time()
+        c2 = lower_iters(2)
+        c4 = lower_iters(4)
+        res.compile_s = time.time() - t0
+        ca2 = c2.cost_analysis() or {}
+        ca4 = c4.cost_analysis() or {}
+        # per-iteration deltas
+        res.flops_per_device = (float(ca4.get("flops", 0))
+                                - float(ca2.get("flops", 0))) / 2
+        res.bytes_accessed_per_device = (
+            float(ca4.get("bytes accessed", 0))
+            - float(ca2.get("bytes accessed", 0))) / 2
+        co2 = _hlo_collective_bytes(c2.as_text())
+        co4 = _hlo_collective_bytes(c4.as_text())
+        colls = {}
+        for kind in set(co2) | set(co4):
+            colls[kind] = {
+                "bytes": max(0.0, (_collect_kind(co4, kind, "bytes")
+                                   - _collect_kind(co2, kind, "bytes")) / 2),
+                "count": max(0.0, (_collect_kind(co4, kind, "count")
+                                   - _collect_kind(co2, kind, "count")) / 2),
+            }
+        res.collectives = colls
+        ma = c4.memory_analysis()
+        if ma is not None:
+            res.argument_bytes = int(ma.argument_size_in_bytes)
+            res.peak_bytes = int(getattr(ma, "peak_memory_in_bytes", 0))
+            res.temp_bytes = int(ma.temp_size_in_bytes)
+        # analytic per-iteration useful flops of Alg. 1 per node:
+        # K^-1 B (2 N^2 S), znorm + p (2 S^2 N^2 * 2), alpha solve (6 N^2),
+        # eta update (2 N^2) — stored in n_active_params as flops/(2*tokens)
+        # analog is meaningless here; keep raw count in n_params field.
+        s_slots = 2 * hops + 1
+        per_node = (2 * n_per_node ** 2 * s_slots
+                    + 4 * s_slots ** 2 * n_per_node ** 2
+                    + 8 * n_per_node ** 2)
+        res.n_params = float(per_node)          # analytic useful flops/node
+        res.n_active_params = float(per_node)
+        res.flops_raw = float(ca4.get("flops", 0))
+        res.ok = True
+    except Exception as e:  # noqa: BLE001
+        res.error = f"{type(e).__name__}: {e}\n{traceback.format_exc()[-2000:]}"
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multipod", default="both",
+                    choices=["both", "single", "multi"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--attention-impl", default=None)
+    ap.add_argument("--dkpca", action="store_true",
+                    help="also run the paper's own workload cell")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else args.arch.split(",")
+    if args.arch == "dkpca":
+        archs = []
+        args.dkpca = True
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    pods = {"both": [False, True], "single": [False],
+            "multi": [True]}[args.multipod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if args.resume and os.path.exists(args.out):
+        results = {tuple(k.split("|")): v
+                   for k, v in json.load(open(args.out)).items()}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                key = (arch, shape, "2x16x16" if mp else "16x16")
+                if key in results and (results[key].get("ok")
+                                       or results[key].get("error", "")
+                                       .startswith("SKIP")):
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                # cost extrapolation only on the single-pod mesh (the
+                # roofline table is single-pod; multi-pod proves lowering)
+                r = run_cell(arch, shape, mp, extrapolate=not mp,
+                             attention_impl=args.attention_impl)
+                results[key] = dataclasses.asdict(r)
+                status = "ok" if r.ok else r.error.splitlines()[0]
+                print(f"[dryrun] {key} -> {status} "
+                      f"({r.compile_s:.1f}s, flops/dev={r.flops_per_device:.3g}, "
+                      f"peak={r.peak_bytes / 2 ** 30:.2f}GiB)", flush=True)
+                with open(args.out, "w") as f:
+                    json.dump({"|".join(k): v for k, v in results.items()},
+                              f, indent=1)
+    if args.dkpca:
+        for mp in pods:
+            key = ("dkpca-paper", "N512xM784", "2x16x16" if mp else "16x16")
+            if not (key in results and results[key].get("ok")):
+                print(f"[dryrun] {key} ...", flush=True)
+                r = run_dkpca_cell(mp)
+                results[key] = dataclasses.asdict(r)
+                print(f"[dryrun] {key} -> "
+                      f"{'ok' if r.ok else r.error.splitlines()[0]}",
+                      flush=True)
+                with open(args.out, "w") as f:
+                    json.dump({"|".join(k): v for k, v in results.items()},
+                              f, indent=1)
+
+    n_ok = sum(1 for v in results.values() if v["ok"])
+    n_skip = sum(1 for v in results.values()
+                 if v.get("error", "").startswith("SKIP"))
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, "
+          f"{len(results) - n_ok - n_skip} failed")
+
+
+if __name__ == "__main__":
+    main()

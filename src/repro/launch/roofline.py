@@ -1,0 +1,134 @@
+"""Roofline derivation from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, in seconds per step:
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS          (197 TF/s bf16)
+    memory     = HLO_bytes_per_device / HBM_BW               (819 GB/s)
+    collective = collective_bytes_per_device / LINK_BW       (50 GB/s/link)
+
+cost_analysis() runs on the SPMD-partitioned per-device module, so its
+flops/bytes are already per-device (verified in tests). collective bytes are
+parsed from the partitioned HLO (sum of collective-op output bytes; the
+published formula collective_bytes/(chips*link_bw) with global bytes reduces
+to the same per-device expression).
+
+Methodology caveats (CPU-backend dry-run):
+- "bytes accessed" is an unfused upper bound (the CPU cost model counts
+  operand traffic before fusion) — the memory term is therefore pessimistic;
+  we report it as an upper bound and use deltas (before/after) for §Perf.
+- The collective term uses raw payload bytes; ring factors (2(n-1)/n for
+  all-reduce etc.) would scale it by <=2x and do not change which term
+  dominates in any cell.
+
+MODEL_FLOPS = 6*N_active*D for train steps (fwd+bwd), 2*N_active*D for
+prefill/decode forward passes, D = tokens processed per step. The ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) measures how much compiled compute is
+"useful" (remat recompute, SSD chunk overhead, and dispatch waste show up
+here)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+
+def model_flops(rec: Dict, shape_name: str, batch: int, seq: int) -> float:
+    n_act = rec["n_active_params"]
+    if shape_name.startswith("train"):
+        return 6.0 * n_act * batch * seq
+    if shape_name.startswith("prefill"):
+        return 2.0 * n_act * batch * seq
+    # decode: one token per sequence per step
+    return 2.0 * n_act * batch
+
+
+SHAPE_DIMS = {
+    "train_4k": (256, 4096),
+    "prefill_32k": (32, 32768),
+    "decode_32k": (128, 1),      # tokens per step
+    "long_500k": (1, 1),
+}
+
+
+def analyze(rec: Dict) -> Dict:
+    shape = rec["shape"]
+    if shape in SHAPE_DIMS:
+        batch, seq = SHAPE_DIMS[shape]
+    else:
+        # dkpca-paper cell: n_active_params carries the ANALYTIC useful
+        # flops per node (= per device) for one ADMM iteration
+        batch, seq = None, None
+    compute_s = rec["flops_per_device"] / PEAK_FLOPS
+    memory_s = rec["bytes_accessed_per_device"] / HBM_BW
+    coll_bytes = sum(v["bytes"] for v in rec["collectives"].values())
+    collective_s = coll_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    if batch is None:
+        mf = rec["n_active_params"] * max(rec["n_devices"], 1)
+    else:
+        mf = model_flops(rec, shape, batch, seq)
+    hlo_total = rec["flops_per_device"] * max(rec["n_devices"], 1)
+    useful = mf / hlo_total if hlo_total else 0.0
+    # roofline fraction: ideal compute time of *useful* flops over the
+    # dominant actual term — the score to hillclimb.
+    ideal_s = mf / (PEAK_FLOPS * max(rec["n_devices"], 1))
+    frac = ideal_s / max(terms[dominant], 1e-30)
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": mf, "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "collective_bytes_per_device": coll_bytes,
+    }
+
+
+def to_markdown(results: Dict[str, Dict], single_pod_only=True) -> str:
+    rows = []
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful FLOPs | roofline frac |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for key, rec in sorted(results.items()):
+        if not rec.get("ok"):
+            continue
+        if single_pod_only and rec["mesh"] != "16x16":
+            continue
+        a = analyze(rec)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {a['compute_s']:.3f} | {a['memory_s']:.3f} "
+            f"| {a['collective_s']:.3f} | **{a['dominant']}** "
+            f"| {a['useful_flops_ratio']:.2f} "
+            f"| {a['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--markdown", default="results/roofline.md")
+    args = ap.parse_args()
+    results = json.load(open(args.dryrun))
+    out = {}
+    for key, rec in results.items():
+        if rec.get("ok"):
+            out[key] = dict(rec, **analyze(rec))
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    md = to_markdown(results, single_pod_only=True)
+    with open(args.markdown, "w") as f:
+        f.write(md + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

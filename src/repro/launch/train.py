@@ -1,0 +1,69 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On real hardware the same entry point runs the full configs on the
+production mesh; on CPU use --smoke (reduced config, single device)."""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from ..configs import get_config
+from ..data.tokens import TokenStream
+from ..distributed.sharding import default_rules
+from ..models import build_model
+from ..optim import AdamWConfig, cosine_with_warmup
+from ..train import TrainConfig, activation_probe, train
+from .mesh import make_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--probe-every", type=int, default=0)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '4x2' => (data=4, model=2)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = rules = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        names = ("data", "model")[: len(dims)]
+        mesh = make_mesh(dims, names)
+        rules = default_rules(multi_pod=False)
+    model = build_model(cfg, mesh=mesh)
+    data = TokenStream(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
+                       seed=args.seed)
+    opt = AdamWConfig(lr=args.lr,
+                      schedule=cosine_with_warmup(args.steps // 20,
+                                                  args.steps))
+    tcfg = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every, seed=args.seed,
+                       probe_every=args.probe_every)
+    probe = (lambda state, batch: activation_probe(
+        state["params"], batch, mesh=mesh)) if args.probe_every else None
+    state, history = train(model, opt, data, tcfg, mesh=mesh, rules=rules,
+                           probe_fn=probe)
+    print(f"final loss: {history['loss'][-1]:.4f} "
+          f"(first: {history['loss'][0]:.4f}); "
+          f"straggler flags: {history['straggler_flags']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,401 @@
+"""Attention: GQA (full / sliding-window), optional qk-norm, MLA
+(DeepSeek-V2 multi-head latent attention with absorbed decode), einsum and
+chunked (flash-style scan) implementations, KV-cache decode paths.
+
+Shapes: activations (B, S, E); q (B, S, H, D); kv (B, S, Hkv, D) with
+H = G * Hkv. Masks are built from absolute positions so the same code serves
+train, prefill and decode.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import ParamCollector, rms_norm
+from .rope import apply_rope
+
+NEG_INF = -1e9
+
+
+# ----------------------------------------------------------------------
+# parameter init
+# ----------------------------------------------------------------------
+
+def init_gqa(col: ParamCollector, cfg: ArchConfig, prefix: str = "attn"):
+    e, h, hk, d = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    col.param(f"{prefix}/wq", (e, h, d), ("embed", "heads", "head_dim"))
+    col.param(f"{prefix}/wk", (e, hk, d), ("embed", "kv_heads", "head_dim"))
+    col.param(f"{prefix}/wv", (e, hk, d), ("embed", "kv_heads", "head_dim"))
+    col.param(f"{prefix}/wo", (h, d, e), ("heads", "head_dim", "embed"))
+    if cfg.qk_norm:
+        col.param(f"{prefix}/q_norm", (d,), ("head_dim",), init="ones")
+        col.param(f"{prefix}/k_norm", (d,), ("head_dim",), init="ones")
+
+
+def init_mla(col: ParamCollector, cfg: ArchConfig, prefix: str = "attn"):
+    e, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dc, dq = cfg.kv_lora_rank, cfg.q_lora_rank
+    col.param(f"{prefix}/w_dkv", (e, dc), ("embed", "kv_lora"))
+    col.param(f"{prefix}/w_kr", (e, dr), ("embed", "rope"))
+    if dq:
+        col.param(f"{prefix}/w_dq", (e, dq), ("embed", "q_lora"))
+        col.param(f"{prefix}/w_uq", (dq, h, dn + dr),
+                  ("q_lora", "heads", "head_dim"))
+    else:
+        col.param(f"{prefix}/w_q", (e, h, dn + dr),
+                  ("embed", "heads", "head_dim"))
+    col.param(f"{prefix}/w_uk", (dc, h, dn), ("kv_lora", "heads", "head_dim"))
+    col.param(f"{prefix}/w_uv", (dc, h, dv), ("kv_lora", "heads", "head_dim"))
+    col.param(f"{prefix}/wo", (h, dv, e), ("heads", "head_dim", "embed"))
+
+
+# ----------------------------------------------------------------------
+# masking
+# ----------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int = 0,
+               k_len_valid: Optional[jax.Array] = None):
+    """(..., Sq, Sk) additive bias from absolute positions. Negative key
+    positions (empty ring-buffer slots) are always masked."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    m = jnp.where(k_pos[..., None, :] < 0, NEG_INF, 0.0)
+    if causal:
+        m = jnp.where(diff < 0, NEG_INF, m)
+    if window > 0:
+        m = jnp.where(diff >= window, NEG_INF, m)
+    if k_len_valid is not None:
+        m = jnp.where(k_pos[..., None, :] >= k_len_valid, NEG_INF, m)
+    return jnp.broadcast_to(m, jnp.broadcast_shapes(m.shape, diff.shape))
+
+
+# ----------------------------------------------------------------------
+# core attention math (einsum / chunked)
+# ----------------------------------------------------------------------
+
+def _sdpa_einsum(q, k, v, bias, scale):
+    """q (B,Sq,Hk,G,D); k,v (B,Sk,Hk,D); bias (B?,Sq,Sk) -> (B,Sq,Hk,G,D)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    s = s + bias[:, None, None]
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+
+
+def _sdpa_chunked(q, k, v, bias, scale, q_chunk: int, kv_chunk: int,
+                  unroll=1):
+    """Flash-style two-level scan with online softmax (memory-bounded).
+    Differentiable by plain autodiff; intended for long-sequence prefill and
+    as the memory-term optimization for training (see EXPERIMENTS.md §Perf).
+    """
+    b, sq, hk, g, d = q.shape
+    sk = k.shape[1]
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    while sq % qc:
+        qc //= 2
+    while sk % kc:
+        kc //= 2
+    nq, nk = sq // qc, sk // kc
+
+    qr = q.reshape(b, nq, qc, hk, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, kc, hk, d).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, kc, hk, d).transpose(1, 0, 2, 3, 4)
+    br = bias.reshape(b, nq, qc, nk, kc).transpose(1, 3, 0, 2, 4)  # nq,nk,b,qc,kc
+
+    def q_step(_, qi):
+        qb, bb = qi           # (b,qc,hk,g,d), (nk,b,qc,kc)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kb, vb, bk = ki   # (b,kc,hk,d) x2, (b,qc,kc)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb).astype(jnp.float32)
+            s = s * scale + bk[:, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(qb.dtype), vb)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hk, g, qc, d), qb.dtype)
+        m0 = jnp.full((b, hk, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kr, vr, bb),
+                                      unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return None, out.transpose(0, 3, 1, 2, 4)      # (b,qc,hk,g,d)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, br),
+                           unroll=unroll)          # (nq,b,qc,hk,g,d)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hk, g, d)
+
+
+def _sdpa_chunked_banded(q, k, v, bias, scale, q_chunk, kv_chunk,
+                         window: int, unroll=1):
+    """§Perf: SWA-banded flash attention. For sliding-window attention only
+    chunk pairs with q_pos - k_pos in [0, window) contribute; instead of
+    masking (which still pays the matmuls), iterate a FIXED band of
+    ceil(window/kc)+1 kv chunks per q chunk, gathered by dynamic index.
+    Compute drops from O(S^2) to O(S * window)."""
+    b, sq, hk, g, d = q.shape
+    sk = k.shape[1]
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    while sq % qc:
+        qc //= 2
+    while sk % kc:
+        kc //= 2
+    nq, nk = sq // qc, sk // kc
+    nband = min(nk, window // kc + (qc + kc - 1) // kc + 1)
+
+    qr = q.reshape(b, nq, qc, hk, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, kc, hk, d)
+    vr = v.reshape(b, nk, kc, hk, d)
+    br = bias.reshape(b, nq, qc, nk, kc)
+
+    def q_step(_, qi):
+        qb, iq = qi
+
+        def kv_step(carry, bi):
+            acc, m, l = carry
+            # newest-first band; out-of-range slots masked (clip would
+            # double-count chunk 0 near the sequence start)
+            ki_raw = (iq * qc + qc - 1) // kc - bi
+            valid = ki_raw >= 0
+            ki = jnp.clip(ki_raw, 0, nk - 1)
+            kb = jax.lax.dynamic_index_in_dim(kr, ki, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, ki, 1, keepdims=False)
+            bk = jax.lax.dynamic_index_in_dim(
+                jax.lax.dynamic_index_in_dim(br, iq, 1, keepdims=False),
+                ki, 2, keepdims=False)                     # (b, qc, kc)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb).astype(jnp.float32)
+            s = s * scale + bk[:, None, None]
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(qb.dtype), vb)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hk, g, qc, d), qb.dtype)
+        m0 = jnp.full((b, hk, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(nband), unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, jnp.arange(nq)), unroll=unroll)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hk, g, d)
+
+
+def sdpa(cfg: ArchConfig, q, k, v, bias):
+    """Grouped-query attention dispatch. q (B,S,H,D), k/v (B,T,Hkv,D)."""
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, s, hk, g, d)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    if cfg.attention_impl == "chunked" and s > 1:
+        if cfg.swa_banded and cfg.attn_kind == "swa" and s == k.shape[1]:
+            out = _sdpa_chunked_banded(qg, k, v, bias, scale,
+                                       cfg.attn_q_chunk, cfg.attn_kv_chunk,
+                                       cfg.window, unroll=cfg.unroll_scans)
+        else:
+            out = _sdpa_chunked(qg, k, v, bias, scale,
+                                cfg.attn_q_chunk, cfg.attn_kv_chunk,
+                                unroll=cfg.unroll_scans)
+    else:
+        out = _sdpa_einsum(qg, k, v, bias, scale)
+    return out.reshape(b, s, h, d)
+
+
+# ----------------------------------------------------------------------
+# GQA module (train / prefill / decode)
+# ----------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array           # (B, T, Hkv, D)
+    v: jax.Array
+
+
+def _seq_shard(t, mesh, shard: bool):
+    """Constrain (B, S, H, D) activations to (batch@data, S@model, ., .) —
+    sequence-parallel attention (context parallelism for training)."""
+    if mesh is None:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from .common import batch_axes_of
+    ba = batch_axes_of(mesh)
+    seq_ax = "model" if (shard and t.shape[1] % mesh.shape["model"] == 0) \
+        else None
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(mesh, P(ba, seq_ax, None, None)))
+
+
+def gqa_forward(p, cfg: ArchConfig, x, positions, causal=True,
+                cache: Optional[KVCache] = None,
+                cache_len: Optional[jax.Array] = None, mesh=None):
+    """x (B,S,E). With cache: decode/append mode — writes new kv at
+    positions, attends over the cache. Returns (out, new_cache)."""
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bse,ehd->bshd", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bse,ehd->bshd", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_seq_shard and cache is None:
+        q = _seq_shard(q, mesh, True)
+        k = _seq_shard(k, mesh, False)   # keys/values replicated over model
+        v = _seq_shard(v, mesh, False)
+
+    window = cfg.window if cfg.attn_kind == "swa" else 0
+    if cache is None:
+        bias = _mask_bias(positions, positions, causal, window)
+        out = sdpa(cfg, q, k, v, bias)
+        new_cache = None
+    else:
+        b, s = x.shape[:2]
+        t = cache.k.shape[1]
+        cl = _scalar(cache_len)
+        if s >= t:
+            # Prefill longer than the cache (SWA ring buffer): attend within
+            # the current sequence, then store the last t tokens at slots
+            # pos % t (ring convention shared with the decode path).
+            bias = _mask_bias(positions, positions, causal, window)
+            out = sdpa(cfg, q, k, v, bias)
+            shift = (cl + s - t) % t if t > 0 else 0
+            ck = jnp.roll(k[:, -t:].astype(cache.k.dtype), shift, axis=1)
+            cv = jnp.roll(v[:, -t:].astype(cache.v.dtype), shift, axis=1)
+        else:
+            # ring write: token with absolute position p lives at slot p % t
+            idx = cl % t
+            ck = _ring_update(cache.k, k.astype(cache.k.dtype), idx)
+            cv = _ring_update(cache.v, v.astype(cache.v.dtype), idx)
+            # absolute position of each slot given newest entry at idx+s-1
+            newest = cl + s - 1
+            slot = jnp.arange(t)
+            k_pos = newest - ((idx + s - 1 - slot) % t)
+            k_pos = jnp.broadcast_to(k_pos[None], (b, t))
+            bias = _mask_bias(positions, k_pos, causal, window)
+            out = sdpa(cfg, q, ck.astype(q.dtype), cv.astype(q.dtype), bias)
+        new_cache = KVCache(ck, cv)
+    out = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def _ring_update(cache, new, idx):
+    """Write `new` (B, S, ...) at ring slots [idx, idx+S) mod T."""
+    t = cache.shape[1]
+    s = new.shape[1]
+    if s == 1:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, idx, axis=1)
+    # general (prefill into larger cache): positions idx..idx+s-1 fit without
+    # wrap when idx + s <= t (standard prefill at cache_len=0); otherwise
+    # wrap via double-write of the roll.
+    return jax.lax.dynamic_update_slice_in_dim(cache, new, idx, axis=1)
+
+
+def _scalar(v):
+    return v if jnp.ndim(v) == 0 else v[0]
+
+
+# ----------------------------------------------------------------------
+# MLA module (DeepSeek-V2): train full-rank path + absorbed decode path
+# ----------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array        # (B, T, dc)   compressed kv latents
+    k_rope: jax.Array      # (B, T, dr)   shared rotary key part
+
+
+def _mla_q(p, cfg, x, positions):
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bse,er->bsr", x, p["w_dq"].astype(x.dtype))
+        q = jnp.einsum("bsr,rhd->bshd", cq, p["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bse,ehd->bshd", x, p["w_q"].astype(x.dtype))
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(p, cfg: ArchConfig, x, positions, causal=True):
+    """Training/prefill path: decompress K/V and run standard attention."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv = jnp.einsum("bse,ec->bsc", x, p["w_dkv"].astype(x.dtype))
+    k_rope = apply_rope(jnp.einsum("bse,ed->bsd", x,
+                                   p["w_kr"].astype(x.dtype)),
+                        positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsc,chd->bshd", c_kv, p["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsc,chd->bshd", c_kv, p["w_uv"].astype(x.dtype))
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (cfg.qk_rope_dim,))],
+        axis=-1)
+    bias = _mask_bias(positions, positions, causal)
+    # full multi-head (n_kv == n_heads) attention with (dn+dr) keys, dv values
+    d_full = cfg.qk_nope_dim + cfg.qk_rope_dim
+    scale = 1.0 / jnp.sqrt(d_full).astype(jnp.float32)
+    b_, s_, h, _ = q.shape
+    if cfg.attention_impl == "chunked" and s_ > 1:
+        # pad v to key dim not needed: chunked impl is dim-agnostic per k/v
+        out = _sdpa_chunked(q.reshape(b_, s_, h, 1, d_full), k, v, bias,
+                            scale, cfg.attn_q_chunk, cfg.attn_kv_chunk,
+                            unroll=cfg.unroll_scans)
+        out = out.reshape(b_, s_, h, cfg.v_head_dim)
+    else:
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        sc = sc + bias[:, None]
+        pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", pr, v)
+    return jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+
+
+def mla_decode(p, cfg: ArchConfig, x, positions, cache: MLACache,
+               cache_len: jax.Array):
+    """Absorbed decode: attention runs entirely in the dc-dim latent space —
+    the cache stores only (c_kv, k_rope): (dc + dr) per token instead of
+    2*H*D (the paper-reported 93% KV-cache reduction for DSv2)."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    # absorb W_UK into q: q_lat[bshc] = q_nope . W_UK
+    q_lat = jnp.einsum("bshd,chd->bshc", q_nope, p["w_uk"].astype(x.dtype))
+
+    c_new = jnp.einsum("bse,ec->bsc", x, p["w_dkv"].astype(x.dtype))
+    kr_new = apply_rope(jnp.einsum("bse,ed->bsd", x,
+                                   p["w_kr"].astype(x.dtype)),
+                        positions, cfg.rope_theta)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), _scalar(cache_len), axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), _scalar(cache_len),
+        axis=1)
+
+    t = c_kv.shape[1]
+    d_full = cfg.qk_nope_dim + cfg.qk_rope_dim
+    scale = 1.0 / jnp.sqrt(d_full).astype(jnp.float32)
+    sc = (jnp.einsum("bshc,btc->bhst", q_lat, c_kv.astype(x.dtype))
+          + jnp.einsum("bshd,btd->bhst", q_rope, k_rope.astype(x.dtype)))
+    sc = sc.astype(jnp.float32) * scale
+    idx = positions[:, 0] if positions.ndim == 2 else positions
+    k_pos = jnp.arange(t)[None].repeat(b, 0)
+    bias = _mask_bias(positions, k_pos, True,
+                      k_len_valid=(idx + s)[:, None, None])
+    pr = jax.nn.softmax(sc + bias[:, None], axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhst,btc->bshc", pr, c_kv.astype(x.dtype))
+    out = jnp.einsum("bshc,chd->bshd", out_lat, p["w_uv"].astype(x.dtype))
+    out = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(x.dtype))
+    return out, MLACache(c_kv, k_rope)

@@ -1,0 +1,186 @@
+"""Model substrate: parameter collection with logical sharding axes, norms,
+initializers, dtype policy.
+
+Parameters live in FLAT dicts keyed by '/'-separated paths; a parallel dict
+maps each path to its tuple of logical axis names. Stacked ("scanned") layer
+parameters carry a leading "layers" axis. Everything is pure JAX — no flax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, jax.Array]
+Axes = Dict[str, Tuple[Optional[str], ...]]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+class ParamCollector:
+    """Creates parameters, records logical axes, threads the PRNG key."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self._key = key
+        self.dtype = dtype
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, path: str, shape: Tuple[int, ...],
+              axes: Tuple[Optional[str], ...], init: str = "normal",
+              scale: Optional[float] = None, dtype=None) -> jax.Array:
+        assert len(shape) == len(axes), (path, shape, axes)
+        assert path not in self.params, f"duplicate param {path}"
+        dt = dtype or self.dtype
+        if init == "zeros":
+            v = jnp.zeros(shape, dt)
+        elif init == "ones":
+            v = jnp.ones(shape, dt)
+        elif init == "normal":
+            if scale is None:
+                # conservative fan-in: product of all-but-last non-stack dims
+                dims = shape[1:] if (axes and axes[0] in ("layers", "stack")) \
+                    else shape
+                fan_in = max(int(math.prod(dims[:-1])) or dims[-1], 1)
+                scale = 1.0 / math.sqrt(fan_in)
+            v = (jax.random.normal(self._next(), shape, jnp.float32)
+                 * scale).astype(dt)
+        else:
+            raise ValueError(init)
+        self.params[path] = v
+        self.axes[path] = tuple(axes)
+        return v
+
+    def abstract(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        return {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                for k, v in self.params.items()}
+
+
+class StackedCollector:
+    """Proxy collector that prepends a 'layers' stack dim to every param —
+    used to initialize scanned layer stacks with per-layer randomness."""
+
+    def __init__(self, parent: ParamCollector, n: int, prefix: str):
+        self._p = parent
+        self._n = n
+        self._prefix = prefix
+        self.dtype = parent.dtype
+
+    def _next(self):
+        return self._p._next()
+
+    def param(self, path, shape, axes, init="normal", scale=None, dtype=None):
+        return self._p.param(f"{self._prefix}/{path}", (self._n,) + tuple(shape),
+                             ("layers",) + tuple(axes), init=init,
+                             scale=scale, dtype=dtype)
+
+
+def abstract_params(init_fn, key) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Axes]:
+    """Trace init_fn(key) -> (param ShapeDtypeStructs, logical axes) without
+    allocating any memory (axes are static metadata captured by closure)."""
+    closed = {}
+
+    def capture(k):
+        p, a = init_fn(k)
+        closed["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(capture, key)
+    return shapes, closed["axes"]
+
+
+# ----------------------------------------------------------------------
+# normalization / activations
+# ----------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def batch_axes_of(mesh):
+    if mesh is None:
+        return None
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def constrain_act(x, mesh):
+    """Pin activations to (batch@data[,pod], replicated...) — without this
+    GSPMD may replicate the batch and pay per-matmul activation all-reduces
+    (measured: 14 TB/device/step on llama3-405b; see EXPERIMENTS.md §Perf)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ba = batch_axes_of(mesh)
+    if x.shape[0] % int(np.prod([mesh.shape[a] for a in ba])):
+        return x
+    spec = P(ba, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------------
+# stacked-layer utilities (scan over layers)
+# ----------------------------------------------------------------------
+
+def slice_layer(params: Params, prefix: str) -> Params:
+    """Sub-dict of params under `prefix/` with the prefix stripped."""
+    plen = len(prefix) + 1
+    return {k[plen:]: v for k, v in params.items() if k.startswith(prefix + "/")}
+
+
+def merge(prefix: str, sub: Params) -> Params:
+    return {f"{prefix}/{k}": v for k, v in sub.items()}
+
+
+@dataclasses.dataclass
+class ScanBlock:
+    """Helper to scan a block function over stacked layer params."""
+
+    @staticmethod
+    def run(block_fn, stacked: Params, carry, remat: str = "full",
+            unroll=1):
+        """carry -> scan over leading 'layers' dim of every stacked param."""
+        fn = block_fn
+        if remat == "full":
+            fn = jax.checkpoint(block_fn,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        elif remat == "dots":
+            fn = jax.checkpoint(
+                block_fn,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+        def step(c, layer_params):
+            c2, out = fn(layer_params, c)
+            return c2, out
+
+        return jax.lax.scan(step, carry, stacked, unroll=unroll)

@@ -1,0 +1,174 @@
+"""Encoder-decoder transformer (seamless-m4t backbone: speech encoder stub
+-> text decoder with cross-attention). The modality frontend is a STUB per
+the assignment: ``batch["frames"]`` carries precomputed frame embeddings at
+d_model."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import KVCache, _mask_bias, gqa_forward, init_gqa, sdpa
+from .common import (ParamCollector, ScanBlock, StackedCollector,
+                     constrain_act, dtype_of, rms_norm, slice_layer)
+from .mlp import init_mlp, mlp_forward
+
+
+def init_encdec(cfg: ArchConfig, key: jax.Array, mesh=None):
+    col = ParamCollector(key, dtype_of(cfg.param_dtype))
+    e = cfg.d_model
+    col.param("embed", (cfg.vocab, e), ("vocab", "embed"), scale=0.02)
+    if not cfg.tie_embeddings:
+        col.param("lm_head", (e, cfg.vocab), ("embed", "vocab"), scale=0.02)
+    col.param("final_norm", (e,), (None,), init="ones")
+    col.param("enc_norm", (e,), (None,), init="ones")
+
+    enc = StackedCollector(col, cfg.n_enc_layers, "enc")
+    init_gqa(enc, cfg)
+    init_mlp(enc, cfg)
+    enc.param("ln_attn", (e,), (None,), init="ones")
+    enc.param("ln_mlp", (e,), (None,), init="ones")
+
+    dec = StackedCollector(col, cfg.n_layers, "dec")
+    init_gqa(dec, cfg)                       # self-attention
+    # cross-attention
+    h, hk, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dec.param("xattn/wq", (e, h, d), ("embed", "heads", "head_dim"))
+    dec.param("xattn/wk", (e, hk, d), ("embed", "kv_heads", "head_dim"))
+    dec.param("xattn/wv", (e, hk, d), ("embed", "kv_heads", "head_dim"))
+    dec.param("xattn/wo", (h, d, e), ("heads", "head_dim", "embed"))
+    init_mlp(dec, cfg)
+    dec.param("ln_attn", (e,), (None,), init="ones")
+    dec.param("ln_xattn", (e,), (None,), init="ones")
+    dec.param("ln_mlp", (e,), (None,), init="ones")
+    return col.params, col.axes
+
+
+def _encode(params, cfg: ArchConfig, frames, mesh=None):
+    x = constrain_act(frames.astype(dtype_of(cfg.compute_dtype)), mesh)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def block(p, carry):
+        x = carry
+        h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+        a, _ = gqa_forward(slice_layer(p, "attn"), cfg, h, positions,
+                           causal=False)
+        x = x + a
+        h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        return constrain_act(x + mlp_forward(slice_layer(p, "mlp"), cfg, h),
+                             mesh), None
+
+    x, _ = ScanBlock.run(block, slice_layer(params, "enc"), x,
+                         remat=cfg.remat, unroll=cfg.unroll_scans)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attn(p, cfg, x, xk, xv):
+    """Cross-attention with precomputed encoder K/V (no mask, no rope)."""
+    q = jnp.einsum("bse,ehd->bshd", x, p["xattn/wq"].astype(x.dtype))
+    bias = jnp.zeros((x.shape[0], x.shape[1], xk.shape[1]), jnp.float32)
+    out = sdpa(cfg, q, xk.astype(x.dtype), xv.astype(x.dtype), bias)
+    return jnp.einsum("bshd,hde->bse", out, p["xattn/wo"].astype(x.dtype))
+
+
+def _enc_kv(p, cfg, enc_out):
+    xk = jnp.einsum("bse,ehd->bshd", enc_out, p["xattn/wk"].astype(enc_out.dtype))
+    xv = jnp.einsum("bse,ehd->bshd", enc_out, p["xattn/wv"].astype(enc_out.dtype))
+    return xk, xv
+
+
+def _decoder(params, cfg: ArchConfig, tokens, enc_out, positions,
+             self_cache=None, cache_len=None, mesh=None):
+    x = constrain_act(
+        params["embed"][tokens].astype(dtype_of(cfg.compute_dtype)), mesh)
+
+    def block(p, carry, cache_slice=None):
+        x = carry
+        h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+        a, new_cache = gqa_forward(
+            slice_layer(p, "attn"), cfg, h, positions, causal=True,
+            cache=None if cache_slice is None else KVCache(*cache_slice),
+            cache_len=cache_len)
+        x = x + a
+        h = rms_norm(x, p["ln_xattn"], cfg.norm_eps)
+        xk, xv = _enc_kv(p, cfg, enc_out)
+        x = x + _cross_attn(p, cfg, h, xk, xv)
+        h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        return constrain_act(x + mlp_forward(slice_layer(p, "mlp"), cfg, h),
+                             mesh), new_cache
+
+    stacked = slice_layer(params, "dec")
+    if self_cache is None:
+        def sblock(p, carry):
+            y, _ = block(p, carry)
+            return y, None
+        x, _ = ScanBlock.run(sblock, stacked, x, remat=cfg.remat,
+                             unroll=cfg.unroll_scans)
+        new_cache = None
+    else:
+        def step(carry, xs):
+            p, ck, cv = xs
+            y, nc = block(p, carry, (ck, cv))
+            return y, nc
+        x, new_cache = jax.lax.scan(step, x,
+                                    (stacked, self_cache[0], self_cache[1]),
+                                    unroll=cfg.unroll_scans)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bse,ev->bsv", x, head.astype(x.dtype)), new_cache
+
+
+def encdec_loss(params, cfg: ArchConfig, batch, mesh=None):
+    enc_out = _encode(params, cfg, batch["frames"], mesh=mesh)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    logits, _ = _decoder(params, cfg, tokens, enc_out, positions, mesh=mesh)
+    targets = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - gold)
+    return loss, {"loss": loss}
+
+
+class EncDecCache(NamedTuple):
+    self_k: jax.Array     # (L, B, T, Hkv, D)
+    self_v: jax.Array
+    enc_out: jax.Array    # (B, S_enc, E)
+
+
+def encdec_init_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    l, hk, d = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return EncDecCache(
+        jnp.zeros((l, batch, max_len, hk, d), dtype),
+        jnp.zeros((l, batch, max_len, hk, d), dtype),
+        jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dtype))
+
+
+def encdec_prefill(params, cfg: ArchConfig, batch, max_len: int, mesh=None,
+                   cache_dtype=jnp.bfloat16):
+    """Encode frames + run the decoder prompt, building the self-attn cache."""
+    enc_out = _encode(params, cfg, batch["frames"], mesh=mesh)
+    cache = encdec_init_cache(cfg, batch["tokens"].shape[0], max_len,
+                              cache_dtype)
+    cache = cache._replace(enc_out=enc_out.astype(cache_dtype))
+    return encdec_decode_step(params, cfg, cache, batch["tokens"],
+                              jnp.zeros((), jnp.int32), mesh=mesh)
+
+
+def encdec_decode_step(params, cfg: ArchConfig, cache, tokens, cache_len,
+                       mesh=None):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(cache_len + jnp.arange(s)[None], (b, s))
+    enc_out = cache.enc_out.astype(dtype_of(cfg.compute_dtype))
+    logits, new_cache = _decoder(params, cfg, tokens, enc_out, positions,
+                                 self_cache=(cache.self_k, cache.self_v),
+                                 cache_len=cache_len, mesh=mesh)
+    return logits[:, -1], EncDecCache(new_cache[0], new_cache[1],
+                                      cache.enc_out)

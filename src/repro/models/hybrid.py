@@ -1,0 +1,227 @@
+"""Hybrid SSM + shared-attention LM (zamba2: mamba2 backbone, ONE shared
+transformer block applied every ``attn_every`` mamba blocks).
+
+Simplification vs. the released zamba2 (noted in DESIGN.md): the shared
+block consumes the residual stream directly (no concat-with-embedding
+re-projection); LoRA adapters on the shared block are omitted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import KVCache, gqa_forward, init_gqa
+from .common import (ParamCollector, ScanBlock, StackedCollector,
+                     constrain_act, dtype_of, rms_norm, slice_layer)
+from .mamba import (Mamba2State, init_mamba2, mamba2_decode, mamba2_forward,
+                    mamba2_init_state)
+from .mlp import init_mlp, mlp_forward
+
+
+def _group_plan(cfg: ArchConfig):
+    g = cfg.n_layers // cfg.attn_every          # full groups (shared attn after each)
+    tail = cfg.n_layers - g * cfg.attn_every
+    return g, tail
+
+
+def init_hybrid_lm(cfg: ArchConfig, key: jax.Array, mesh=None):
+    col = ParamCollector(key, dtype_of(cfg.param_dtype))
+    e = cfg.d_model
+    col.param("embed", (cfg.vocab, e), ("vocab", "embed"), scale=0.02)
+    if not cfg.tie_embeddings:
+        col.param("lm_head", (e, cfg.vocab), ("embed", "vocab"), scale=0.02)
+    col.param("final_norm", (e,), (None,), init="ones")
+    sub = StackedCollector(col, cfg.n_layers, "layers")
+    init_mamba2(sub, cfg, "mamba")
+    sub.param("ln", (e,), (None,), init="ones")
+    # ONE shared attention+mlp block (reused at every application)
+    shared = ParamCollector(col._next(), col.dtype)
+    init_gqa(shared, cfg)
+    init_mlp(shared, cfg)
+    shared.param("ln_attn", (e,), (None,), init="ones")
+    shared.param("ln_mlp", (e,), (None,), init="ones")
+    for k, v in shared.params.items():
+        col.params[f"shared/{k}"] = v
+        col.axes[f"shared/{k}"] = shared.axes[k]
+    return col.params, col.axes
+
+
+def _mamba_block(cfg: ArchConfig, mesh=None):
+    def block(p, carry):
+        x = carry
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        y = mamba2_forward(slice_layer(p, "mamba"), cfg, h)
+        return constrain_act(x + y, mesh), None
+    return block
+
+
+def _shared_attn(params, cfg: ArchConfig, x, positions, cache=None,
+                 cache_len=None):
+    p = slice_layer(params, "shared")
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    a, new_cache = gqa_forward(slice_layer(p, "attn"), cfg, h, positions,
+                               causal=True, cache=cache, cache_len=cache_len)
+    x = x + a
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    return x + mlp_forward(slice_layer(p, "mlp"), cfg, h), new_cache
+
+
+def _tree_slice(stacked, lo, hi):
+    return {k: v[lo:hi] for k, v in stacked.items()}
+
+
+def hybrid_lm_loss(params, cfg: ArchConfig, batch, mesh=None):
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    stacked = slice_layer(params, "layers")
+    x = constrain_act(x, mesh)
+    g, tail = _group_plan(cfg)
+    block = _mamba_block(cfg, mesh)
+    for gi in range(g):
+        lo = gi * cfg.attn_every
+        x, _ = ScanBlock.run(block, _tree_slice(stacked, lo,
+                                                lo + cfg.attn_every),
+                             x, remat=cfg.remat, unroll=cfg.unroll_scans)
+        x, _ = _shared_attn(params, cfg, x, positions)
+    if tail:
+        x, _ = ScanBlock.run(block, _tree_slice(stacked, g * cfg.attn_every,
+                                                cfg.n_layers),
+                             x, remat=cfg.remat, unroll=cfg.unroll_scans)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bse,ev->bsv", x, head.astype(x.dtype))
+    targets = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - gold)
+    return loss, {"loss": loss}
+
+
+def hybrid_init_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    st = mamba2_init_state(cfg, batch, dtype)
+    l = cfg.n_layers
+    g, _ = _group_plan(cfg)
+    hk, d = cfg.n_kv_heads, cfg.head_dim
+    return (jnp.zeros((l,) + st.conv.shape, st.conv.dtype),
+            jnp.zeros((l,) + st.ssm.shape, st.ssm.dtype),
+            jnp.zeros((g, batch, max_len, hk, d), dtype),    # shared attn K
+            jnp.zeros((g, batch, max_len, hk, d), dtype))    # shared attn V
+
+
+def _one_token(params, cfg: ArchConfig, x, positions, conv_c, ssm_c, ck, cv,
+               cache_len):
+    """Single-token pass through the full hybrid stack. x (B, 1, E)."""
+    stacked = slice_layer(params, "layers")
+    g, tail = _group_plan(cfg)
+
+    def mstep(carry, xs):
+        p, cc, sc = xs
+        h = rms_norm(carry, p["ln"], cfg.norm_eps)
+        y, st = mamba2_decode(slice_layer(p, "mamba"), cfg, h,
+                              Mamba2State(cc, sc))
+        return carry + y, (st.conv, st.ssm)
+
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+    for gi in range(g):
+        lo = gi * cfg.attn_every
+        hi = lo + cfg.attn_every
+        x, (cn, sn) = jax.lax.scan(
+            mstep, x, (_tree_slice(stacked, lo, hi), conv_c[lo:hi],
+                       ssm_c[lo:hi]), unroll=cfg.unroll_scans)
+        new_conv.append(cn)
+        new_ssm.append(sn)
+        x, kvc = _shared_attn(params, cfg, x, positions,
+                              cache=KVCache(ck[gi], cv[gi]),
+                              cache_len=cache_len)
+        new_k.append(kvc.k)
+        new_v.append(kvc.v)
+    if tail:
+        x, (cn, sn) = jax.lax.scan(
+            mstep, x, (_tree_slice(stacked, g * cfg.attn_every, cfg.n_layers),
+                       conv_c[g * cfg.attn_every:],
+                       ssm_c[g * cfg.attn_every:]), unroll=cfg.unroll_scans)
+        new_conv.append(cn)
+        new_ssm.append(sn)
+    return x, (jnp.concatenate(new_conv), jnp.concatenate(new_ssm),
+               jnp.stack(new_k), jnp.stack(new_v))
+
+
+def hybrid_prefill(params, cfg: ArchConfig, batch, max_len: int, mesh=None,
+                   cache_dtype=jnp.bfloat16):
+    """Parallel prefill: chunked mamba2 forward (with state extraction) +
+    shared-attention KV cache build for the whole prompt."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    stacked = slice_layer(params, "layers")
+    g, tail = _group_plan(cfg)
+    hk, d = cfg.n_kv_heads, cfg.head_dim
+    t_cache = max_len
+
+    def pblock(p, carry):
+        xx = carry
+        h = rms_norm(xx, p["ln"], cfg.norm_eps)
+        y, st = mamba2_forward(slice_layer(p, "mamba"), cfg, h,
+                               return_state=True)
+        return xx + y, (st.conv, st.ssm)
+
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+    for gi in range(g):
+        lo = gi * cfg.attn_every
+        x, (cn, sn) = ScanBlock.run(
+            pblock, _tree_slice(stacked, lo, lo + cfg.attn_every), x,
+            remat="none", unroll=cfg.unroll_scans)
+        new_conv.append(cn)
+        new_ssm.append(sn)
+        kv0 = KVCache(jnp.zeros((b, t_cache, hk, d), cache_dtype),
+                      jnp.zeros((b, t_cache, hk, d), cache_dtype))
+        x, kvc = _shared_attn(params, cfg, x, positions, cache=kv0,
+                              cache_len=jnp.zeros((), jnp.int32))
+        new_k.append(kvc.k)
+        new_v.append(kvc.v)
+    if tail:
+        x, (cn, sn) = ScanBlock.run(
+            pblock, _tree_slice(stacked, g * cfg.attn_every, cfg.n_layers),
+            x, remat="none", unroll=cfg.unroll_scans)
+        new_conv.append(cn)
+        new_ssm.append(sn)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bse,ev->bsv", x[:, -1:], head.astype(x.dtype))[:, -1]
+    return logits, (jnp.concatenate(new_conv), jnp.concatenate(new_ssm),
+                    jnp.stack(new_k), jnp.stack(new_v))
+
+
+def hybrid_decode_step(params, cfg: ArchConfig, cache, tokens, cache_len,
+                       mesh=None):
+    """tokens (B, S): S=1 decode, S>1 prefill (time-scanned token steps —
+    the mamba recurrence is inherently sequential at inference)."""
+    x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))
+    b, s = tokens.shape
+
+    if s == 1:
+        positions = jnp.broadcast_to(cache_len + jnp.arange(1)[None], (b, 1))
+        x, new_cache = _one_token(params, cfg, x, positions, *cache,
+                                  cache_len)
+    else:
+        def time_step(carry, t):
+            cache_t = carry
+            xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)
+            pos = jnp.broadcast_to((cache_len + t)[None, None], (b, 1))
+            y, new_cache = _one_token(params, cfg, xt, pos, *cache_t,
+                                      cache_len + t)
+            return new_cache, y[:, 0]
+
+        new_cache, ys = jax.lax.scan(time_step, cache, jnp.arange(s))
+        x = ys[-1][:, None]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bse,ev->bsv", x, head.astype(x.dtype))[:, -1]
+    return logits, new_cache

@@ -1,0 +1,244 @@
+"""Decoder-only language model assembly (dense / MoE / MLA / VLM-backbone).
+
+Layers are stacked on a leading axis and applied with jax.lax.scan (compile
+time stays O(1) in depth; remat policy per config). The same block code
+serves train, prefill (build KV cache + logits) and decode (one token,
+cache update) — decode uses the MLA absorbed path where applicable.
+
+VLM/audio-stub models consume a prefix of precomputed frontend embeddings
+(``batch["frontend"]``, already at d_model) followed by text tokens; loss is
+masked to text positions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import (KVCache, MLACache, gqa_forward, init_gqa, init_mla,
+                        mla_decode, mla_forward)
+from .common import (ParamCollector, ScanBlock, StackedCollector,
+                     constrain_act, dtype_of, rms_norm, slice_layer)
+from .mlp import init_mlp, mlp_forward
+from .moe import init_moe, moe_forward, moe_forward_ref
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def init_decoder_lm(cfg: ArchConfig, key: jax.Array, mesh=None):
+    col = ParamCollector(key, dtype_of(cfg.param_dtype))
+    e = cfg.d_model
+    col.param("embed", (cfg.vocab, e), ("vocab", "embed"), scale=0.02)
+    if not cfg.tie_embeddings:
+        col.param("lm_head", (e, cfg.vocab), ("embed", "vocab"), scale=0.02)
+    col.param("final_norm", (e,), (None,), init="ones")
+
+    def layer_block(col2: ParamCollector, moe: bool):
+        if cfg.attn_kind == "mla":
+            init_mla(col2, cfg)
+        else:
+            init_gqa(col2, cfg)
+        col2.param("ln_attn", (e,), (None,), init="ones")
+        col2.param("ln_mlp", (e,), (None,), init="ones")
+        if moe:
+            init_moe(col2, cfg)
+        else:
+            init_mlp(col2, cfg, d_ff=(cfg.d_ff_dense or cfg.d_ff))
+
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    # leading dense layers (deepseek-v2 pattern), unscanned
+    for i in range(cfg.first_k_dense):
+        sub = ParamCollector(col._next(), col.dtype)
+        layer_block(sub, moe=False)
+        for k, v in sub.params.items():
+            col.params[f"dense{i}/{k}"] = v
+            col.axes[f"dense{i}/{k}"] = sub.axes[k]
+    # stacked (scanned) layers — per-layer randomness via the stack dim
+    layer_block(StackedCollector(col, n_scan, "layers"), moe=cfg.is_moe)
+    return col.params, col.axes
+
+
+# ----------------------------------------------------------------------
+# blocks
+# ----------------------------------------------------------------------
+
+def _block_train(cfg: ArchConfig, mesh):
+    def block(p, carry):
+        x, positions, aux = carry
+        h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+        ap = slice_layer(p, "attn")
+        if cfg.attn_kind == "mla":
+            a = mla_forward(ap, cfg, h, positions)
+        else:
+            a, _ = gqa_forward(ap, cfg, h, positions, mesh=mesh)
+        x = x + a
+        h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        if "moe/router" in p:
+            mp = slice_layer(p, "moe")
+            if mesh is not None:
+                m, aux_l = moe_forward(mp, cfg, h, mesh)
+            else:
+                m, aux_l = moe_forward_ref(mp, cfg, h)
+            aux = aux + aux_l
+        else:
+            m = mlp_forward(slice_layer(p, "mlp"), cfg, h)
+        return (constrain_act(x + m, mesh), positions, aux), None
+    return block
+
+
+def _block_decode(cfg: ArchConfig, mesh):
+    def block(p, carry, cache_slice, cache_len):
+        x, positions = carry
+        h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+        ap = slice_layer(p, "attn")
+        if cfg.attn_kind == "mla":
+            a, new_cache = mla_decode(ap, cfg, h, positions,
+                                      MLACache(*cache_slice), cache_len)
+        else:
+            a, new_cache = gqa_forward(ap, cfg, h, positions, causal=True,
+                                       cache=KVCache(*cache_slice),
+                                       cache_len=cache_len)
+        x = x + a
+        h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+        if "moe/router" in p:
+            mp = slice_layer(p, "moe")
+            if mesh is not None:
+                m, _ = moe_forward(mp, cfg, h, mesh)
+            else:
+                m, _ = moe_forward_ref(mp, cfg, h)
+        else:
+            m = mlp_forward(slice_layer(p, "mlp"), cfg, h)
+        return (constrain_act(x + m, mesh), positions), tuple(new_cache)
+    return block
+
+
+# ----------------------------------------------------------------------
+# forward passes
+# ----------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ArchConfig, batch: Dict[str, Any]):
+    tokens = batch["tokens"]
+    emb = params["embed"]
+    x = emb[tokens].astype(dtype_of(cfg.compute_dtype))
+    if cfg.frontend != "none" and "frontend" in batch:
+        fe = batch["frontend"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return x, positions
+
+
+def _run_layers(params, cfg: ArchConfig, x, positions, mesh):
+    x = constrain_act(x, mesh)
+    aux = jnp.zeros((), jnp.float32)
+    block = _block_train(cfg, mesh)
+    for i in range(cfg.first_k_dense):
+        p_i = slice_layer(params, f"dense{i}")
+        fn = jax.checkpoint(block) if cfg.remat != "none" else block
+        (x, positions, aux), _ = fn(p_i, (x, positions, aux))
+    stacked = slice_layer(params, "layers")
+    (x, positions, aux), _ = ScanBlock.run(
+        block, stacked, (x, positions, aux), remat=cfg.remat,
+        unroll=cfg.unroll_scans)
+    return x, aux
+
+
+def _logits(params, cfg: ArchConfig, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bse,ev->bsv", x, head.astype(x.dtype))
+
+
+def lm_loss(params, cfg: ArchConfig, batch, mesh=None):
+    """Next-token CE, masked to text positions. Returns (loss, metrics)."""
+    x, positions = _embed_inputs(params, cfg, batch)
+    x, aux = _run_layers(params, cfg, x, positions, mesh)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    f = cfg.frontend_seq if (cfg.frontend != "none"
+                             and "frontend" in batch) else 0
+    x = x[:, f:]                                   # text region only
+    logits = _logits(params, cfg, x)
+    targets = batch["labels"]
+    mask = batch.get("loss_mask")
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = nll.size
+    loss = jnp.sum(nll) / denom
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    """Stacked (scanned-layer) KV cache. MLA caches latents (dc + dr)."""
+    l = cfg.n_layers
+    if cfg.attn_kind == "mla":
+        return (jnp.zeros((l, batch, max_len, cfg.kv_lora_rank), dtype),
+                jnp.zeros((l, batch, max_len, cfg.qk_rope_dim), dtype))
+    hk, d = cfg.n_kv_heads, cfg.head_dim
+    if cfg.attn_kind == "swa":
+        max_len = min(max_len, cfg.window)
+    return (jnp.zeros((l, batch, max_len, hk, d), dtype),
+            jnp.zeros((l, batch, max_len, hk, d), dtype))
+
+
+def lm_decode_step(params, cfg: ArchConfig, cache, tokens, cache_len,
+                   mesh=None):
+    """tokens (B, 1) -> (logits (B, V), new cache). cache_len: scalar."""
+    emb = params["embed"]
+    x = emb[tokens].astype(dtype_of(cfg.compute_dtype))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(cache_len + jnp.arange(s)[None], (b, s))
+    block = _block_decode(cfg, mesh)
+
+    n_dense = cfg.first_k_dense
+    new_dense_caches = []
+    x_pos = (x, positions)
+    for i in range(n_dense):
+        p_i = slice_layer(params, f"dense{i}")
+        sl = tuple(c[i] for c in cache)
+        x_pos, nc = block(p_i, x_pos, sl, cache_len)
+        new_dense_caches.append(nc)
+
+    stacked = slice_layer(params, "layers")
+
+    def step(carry, xs):
+        layer_params, cache_slice = xs
+        carry, new_slice = block(layer_params, carry, cache_slice, cache_len)
+        return carry, new_slice
+
+    scan_cache = tuple(c[n_dense:] for c in cache)
+    (x, _), new_scan = jax.lax.scan(step, x_pos, (stacked, scan_cache),
+                                    unroll=cfg.unroll_scans)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x)[:, -1]
+
+    new_cache = []
+    for ci in range(len(cache)):
+        parts = ([jnp.stack([new_dense_caches[i][ci] for i in range(n_dense)])]
+                 if n_dense else [])
+        parts.append(new_scan[ci])
+        new_cache.append(jnp.concatenate(parts, axis=0) if n_dense
+                         else new_scan[ci])
+    return logits, tuple(new_cache)
+
+
+def lm_prefill(params, cfg: ArchConfig, batch, max_len: int, mesh=None,
+               cache_dtype=jnp.bfloat16):
+    """Process a full prompt: returns (last-position logits, filled cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache = init_kv_cache(cfg, b, max_len, cache_dtype)
+    logits, cache = lm_decode_step(params, cfg, cache, tokens,
+                                   jnp.zeros((), jnp.int32), mesh=mesh)
+    return logits, cache

@@ -1,0 +1,312 @@
+"""Mamba state-space layers.
+
+mamba1 (falcon-mamba): selective scan h_t = exp(dt A) h_{t-1} + dt B_t x_t,
+y_t = C_t h_t + D x_t. TPU adaptation: time is processed in chunks —
+``associative_scan`` *within* a chunk (parallel, materializes only
+(B, chunk, d_inner, N) transients) and ``lax.scan`` carrying the (B, d_inner,
+N) state *across* chunks. This bounds live memory to one chunk of states
+while keeping the MXU/VPU busy, instead of a 4k-step sequential scan.
+
+mamba2 (zamba2): SSD (state-space duality) chunked algorithm — intra-chunk
+attention-like quadratic term via matmuls + inter-chunk low-rank state
+passing; the standard TPU-friendly formulation (all MXU matmuls).
+
+Both provide O(1)-state decode steps (conv ring buffer + ssm state), which is
+what makes the 500k long-context decode shape run at constant memory.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import ParamCollector
+
+
+# ----------------------------------------------------------------------
+# shared: causal depthwise conv (explicit shifts; decode keeps a ring buffer)
+# ----------------------------------------------------------------------
+
+def _causal_conv(x, w, bias=None):
+    """x (B, L, C); w (K, C) depthwise taps (tap k multiplies x[t-K+1+k])."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[i][None, None, :]
+    if bias is not None:
+        out = out + bias[None, None, :]
+    return out
+
+
+def _conv_step(state, x_t, w, bias=None):
+    """state (B, K-1, C) past inputs; x_t (B, C). Returns (y_t, new_state)."""
+    full = jnp.concatenate([state, x_t[:, None]], axis=1)       # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", full, w)
+    if bias is not None:
+        y = y + bias[None, :]
+    return y, full[:, 1:]
+
+
+# ----------------------------------------------------------------------
+# mamba1
+# ----------------------------------------------------------------------
+
+class Mamba1State(NamedTuple):
+    conv: jax.Array    # (B, K-1, d_inner)
+    ssm: jax.Array     # (B, d_inner, N)
+
+
+def init_mamba1(col: ParamCollector, cfg: ArchConfig, prefix: str = "mamba"):
+    e, di, n, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    col.param(f"{prefix}/w_in", (e, 2 * di), ("embed", "inner"))
+    col.param(f"{prefix}/conv_w", (cfg.d_conv, di), ("conv", "inner"),
+              scale=0.5)
+    col.param(f"{prefix}/conv_b", (di,), ("inner",), init="zeros")
+    col.param(f"{prefix}/w_x", (di, dtr + 2 * n), ("inner", None))
+    col.param(f"{prefix}/w_dt", (dtr, di), (None, "inner"))
+    col.param(f"{prefix}/dt_bias", (di,), ("inner",), init="zeros")
+    col.param(f"{prefix}/a_log", (di, n), ("inner", "state"), init="zeros")
+    col.param(f"{prefix}/d", (di,), ("inner",), init="ones")
+    col.param(f"{prefix}/w_out", (di, e), ("inner", "embed"))
+
+
+def _mamba1_inputs(p, cfg, x):
+    """Shared projections: returns (xz gate z, u (conv'd), dt, B, C)."""
+    di, n, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = jnp.einsum("ble,ei->bli", x, p["w_in"].astype(x.dtype))
+    u, z = jnp.split(xz, 2, axis=-1)
+    return u, z
+
+
+def _mamba1_ssm_params(p, cfg, u):
+    dtr, n = cfg.dt_rank, cfg.ssm_state
+    proj = jnp.einsum("bli,ir->blr", u, p["w_x"].astype(u.dtype))
+    dt_in, b_in, c_in = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,ri->bli", dt_in, p["w_dt"].astype(u.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))        # (di, N), negative
+    return dt, a, b_in.astype(jnp.float32), c_in.astype(jnp.float32)
+
+
+def mamba1_forward(p, cfg: ArchConfig, x, return_state: bool = False):
+    """x (B, L, E) -> (B, L, E). Chunked associative scan over time.
+    With return_state: also returns Mamba1State for decode continuation
+    (the parallel-prefill path)."""
+    b, l, _ = x.shape
+    di, n, ck = cfg.d_inner, cfg.ssm_state, cfg.ssm_chunk
+    u, z = _mamba1_inputs(p, cfg, x)
+    u_raw = u
+    u = jax.nn.silu(_causal_conv(u, p["conv_w"].astype(u.dtype),
+                                 p["conv_b"].astype(u.dtype)))
+    dt, a, b_in, c_in = _mamba1_ssm_params(p, cfg, u)
+
+    ck = min(ck, l)
+    while l % ck:
+        ck //= 2
+    nchunks = l // ck
+    uf = u.astype(jnp.float32)
+    # decay factors and inputs: adt (B,L,di,N), bx (B,L,di,N)
+    rs = lambda t: t.reshape(b, nchunks, ck, *t.shape[2:])
+    dt_c, u_c, b_c, c_c = rs(dt), rs(uf), rs(b_in), rs(c_in)
+
+    def chunk_step(h, inp):
+        dt_k, u_k, b_k, c_k = inp                       # (B,ck,...)
+        adt = jnp.exp(dt_k[..., None] * a[None, None])  # (B,ck,di,N)
+        bx = (dt_k * u_k)[..., None] * b_k[:, :, None, :]
+
+        def combine(l_, r_):
+            al, bl = l_
+            ar, br = r_
+            return al * ar, bl * ar + br
+
+        a_acc, h_in = jax.lax.associative_scan(combine, (adt, bx), axis=1)
+        hs = h_in + a_acc * h[:, None]                  # add carried state
+        y_k = jnp.einsum("bldn,bln->bld", hs, c_k)
+        return hs[:, -1], y_k
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    h_fin, ys = jax.lax.scan(
+        lambda h, i: chunk_step(h, jax.tree.map(lambda t: t[:, i], (dt_c, u_c, b_c, c_c))),
+        h0, jnp.arange(nchunks), unroll=cfg.unroll_scans)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, l, di)
+    y = y + uf * p["d"].astype(jnp.float32)[None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bli,ie->ble", y, p["w_out"].astype(x.dtype))
+    if return_state:
+        km1 = cfg.d_conv - 1
+        tail = u_raw[:, -km1:]                         # pre-conv inputs
+        tail = jnp.pad(tail, ((0, 0), (max(km1 - l, 0), 0), (0, 0)))
+        return out, Mamba1State(tail, h_fin)
+    return out
+
+
+def mamba1_decode(p, cfg: ArchConfig, x, state: Mamba1State):
+    """Single-token step: x (B, 1, E) -> (y (B,1,E), new state)."""
+    u, z = _mamba1_inputs(p, cfg, x)
+    u1, conv_state = _conv_step(state.conv, u[:, 0],
+                                p["conv_w"].astype(u.dtype),
+                                p["conv_b"].astype(u.dtype))
+    u1 = jax.nn.silu(u1)[:, None]                        # (B,1,di)
+    dt, a, b_in, c_in = _mamba1_ssm_params(p, cfg, u1)
+    adt = jnp.exp(dt[:, 0, :, None] * a[None])           # (B,di,N)
+    bx = (dt[:, 0] * u1[:, 0].astype(jnp.float32))[..., None] \
+        * b_in[:, 0, None, :]
+    h = state.ssm * adt + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_in[:, 0])
+    y = y + u1[:, 0].astype(jnp.float32) * p["d"].astype(jnp.float32)[None]
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    out = jnp.einsum("bli,ie->ble", y, p["w_out"].astype(x.dtype))
+    return out, Mamba1State(conv_state, h)
+
+
+def mamba1_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    return Mamba1State(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32))
+
+
+# ----------------------------------------------------------------------
+# mamba2 (SSD) — zamba2 backbone
+# ----------------------------------------------------------------------
+
+class Mamba2State(NamedTuple):
+    conv: jax.Array    # (B, K-1, d_inner + 2*N)
+    ssm: jax.Array     # (B, H, hd, N)
+
+
+def init_mamba2(col: ParamCollector, cfg: ArchConfig, prefix: str = "mamba"):
+    e, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    conv_dim = di + 2 * n
+    col.param(f"{prefix}/w_in", (e, 2 * di + 2 * n + nh), ("embed", "inner"))
+    col.param(f"{prefix}/conv_w", (cfg.d_conv, conv_dim), ("conv", None),
+              scale=0.5)
+    col.param(f"{prefix}/conv_b", (conv_dim,), (None,), init="zeros")
+    col.param(f"{prefix}/dt_bias", (nh,), (None,), init="zeros")
+    col.param(f"{prefix}/a_log", (nh,), (None,), init="zeros")
+    col.param(f"{prefix}/d", (nh,), (None,), init="ones")
+    col.param(f"{prefix}/norm_w", (di,), ("inner",), init="ones")
+    col.param(f"{prefix}/w_out", (di, e), ("inner", "embed"))
+
+
+def _mamba2_split(p, cfg, x):
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("ble,ei->bli", x, p["w_in"].astype(x.dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt  # xbc goes through conv; dt (B,L,nh)
+
+
+def _ssd_chunked(xh, b_in, c_in, dt, a, chunk: int, h0=None, unroll=1):
+    """SSD scan. xh (B,L,H,hd); b_in/c_in (B,L,N); dt (B,L,H) (softplus'd);
+    a (H,) negative. Returns (y (B,L,H,hd), final state (B,H,hd,N))."""
+    b, l, h, hd = xh.shape
+    n = b_in.shape[-1]
+    ck = min(chunk, l)
+    while l % ck:
+        ck //= 2
+    nc = l // ck
+    rs = lambda t: t.reshape(b, nc, ck, *t.shape[2:])
+    xc, bc, cc, dtc = rs(xh.astype(jnp.float32)), rs(b_in), rs(c_in), rs(dt)
+
+    def chunk_fn(state, i):
+        x_k = xc[:, i]                                   # (B,ck,H,hd)
+        b_k, c_k = bc[:, i], cc[:, i]                    # (B,ck,N)
+        dt_k = dtc[:, i]                                 # (B,ck,H)
+        da = dt_k * a[None, None]                        # (B,ck,H) log-decay
+        cum = jnp.cumsum(da, axis=1)                     # (B,ck,H)
+        # intra-chunk (attention-like) term
+        seg = cum[:, :, None, :] - cum[:, None, :, :]    # (B,ck,ck,H) l-m
+        causal = jnp.tril(jnp.ones((ck, ck), bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bln,bmn->blm", c_k, b_k)        # (B,ck,ck)
+        w = cb[..., None] * decay * dt_k[:, None, :, :]  # (B,l,m,H)
+        y = jnp.einsum("blmh,bmhd->blhd", w, x_k)
+        # inter-chunk: contribution of carried state
+        y = y + jnp.einsum("bln,blh,bhdn->blhd", c_k, jnp.exp(cum), state)
+        # next state: decay whole chunk + accumulate inputs
+        rev = cum[:, -1:, :] - cum                       # decay to chunk end
+        contrib = jnp.einsum("bln,blh,blhd->bhdn",
+                             b_k, jnp.exp(rev) * dt_k, x_k)
+        state = state * jnp.exp(cum[:, -1])[..., None, None] + contrib
+        return state, y
+
+    state0 = h0 if h0 is not None else jnp.zeros((b, h, hd, n), jnp.float32)
+    state, ys = jax.lax.scan(chunk_fn, state0, jnp.arange(nc), unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, l, h, hd)
+    return y, state
+
+
+def mamba2_forward(p, cfg: ArchConfig, x, return_state: bool = False):
+    b, l, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    z, xbc, dt = _mamba2_split(p, cfg, x)
+    xbc_raw = xbc
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype)))
+    xs, b_in, c_in = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(b, l, nh, hd)
+    y, _ssm_state = _ssd_chunked(xh, b_in.astype(jnp.float32),
+                                 c_in.astype(jnp.float32), dt, a,
+                                 cfg.ssm_chunk, unroll=cfg.unroll_scans)
+    y = y + xh.astype(jnp.float32) * p["d"].astype(jnp.float32)[None, None, :,
+                                                                None]
+    y = y.reshape(b, l, di).astype(x.dtype)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    from .common import rms_norm
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bli,ie->ble", y, p["w_out"].astype(x.dtype))
+    if return_state:
+        km1 = cfg.d_conv - 1
+        tail = xbc_raw[:, -km1:]
+        tail = jnp.pad(tail, ((0, 0), (max(km1 - l, 0), 0), (0, 0)))
+        return out, Mamba2State(tail, _ssm_state)
+    return out
+
+
+def mamba2_decode(p, cfg: ArchConfig, x, state: Mamba2State):
+    b = x.shape[0]
+    di, n = cfg.d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    z, xbc, dt = _mamba2_split(p, cfg, x)
+    xbc1, conv_state = _conv_step(state.conv, xbc[:, 0],
+                                  p["conv_w"].astype(x.dtype),
+                                  p["conv_b"].astype(x.dtype))
+    xbc1 = jax.nn.silu(xbc1)
+    xs, b_in, c_in = jnp.split(xbc1, [di, di + n], axis=-1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))   # (B,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(b, nh, hd).astype(jnp.float32)
+    decay = jnp.exp(dt1 * a[None])                               # (B,nh)
+    h = state.ssm * decay[..., None, None] + jnp.einsum(
+        "bhd,bn,bh->bhdn", xh, b_in.astype(jnp.float32), dt1)
+    y = jnp.einsum("bhdn,bn->bhd", h, c_in.astype(jnp.float32))
+    y = y + xh * p["d"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, di).astype(x.dtype) * jax.nn.silu(z[:, 0])
+    from .common import rms_norm
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)[:, None]
+    out = jnp.einsum("bli,ie->ble", y, p["w_out"].astype(x.dtype))
+    return out, Mamba2State(conv_state, h)
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    nh = cfg.d_inner // cfg.ssm_head_dim
+    return Mamba2State(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32))

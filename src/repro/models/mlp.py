@@ -1,0 +1,24 @@
+"""Gated MLP (SwiGLU family)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import ParamCollector, activation
+
+
+def init_mlp(col: ParamCollector, cfg: ArchConfig, prefix: str = "mlp",
+             d_ff: int = 0):
+    e = cfg.d_model
+    f = d_ff or cfg.d_ff
+    col.param(f"{prefix}/w_gate", (e, f), ("embed", "mlp"))
+    col.param(f"{prefix}/w_up", (e, f), ("embed", "mlp"))
+    col.param(f"{prefix}/w_down", (f, e), ("mlp", "embed"))
+
+
+def mlp_forward(p, cfg: ArchConfig, x):
+    act = activation(cfg.act)
+    g = act(jnp.einsum("bse,ef->bsf", x, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("bse,ef->bsf", x, p["w_up"].astype(x.dtype))
+    return jnp.einsum("bsf,fe->bse", g * u, p["w_down"].astype(x.dtype))

@@ -1,0 +1,72 @@
+"""Unified Model interface — dispatches per architecture family.
+
+    model = build_model(cfg, mesh=None)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    loss, metrics = model.loss(params, batch)
+    cache = model.init_cache(batch_size, max_len)
+    logits, cache = model.decode_step(params, cache, tokens, cache_len)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import encdec, hybrid, lm, ssm_lm
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    mesh: Optional[Any]
+    _init: Callable
+    _loss: Callable
+    _init_cache: Callable
+    _decode: Callable
+    _prefill: Optional[Callable] = None
+
+    def init(self, key):
+        return self._init(self.cfg, key, mesh=self.mesh)
+
+    def loss(self, params, batch):
+        return self._loss(params, self.cfg, batch, mesh=self.mesh)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return self._init_cache(self.cfg, batch, max_len, dtype)
+
+    def decode_step(self, params, cache, tokens, cache_len):
+        return self._decode(params, self.cfg, cache, tokens, cache_len,
+                            mesh=self.mesh)
+
+    def prefill(self, params, batch, max_len: int):
+        if self._prefill is not None:
+            return self._prefill(params, self.cfg, batch, max_len,
+                                 mesh=self.mesh)
+        # default: decode-step over the whole prompt at cache_len 0
+        cache = self.init_cache(batch["tokens"].shape[0], max_len)
+        return self.decode_step(params, cache, batch["tokens"],
+                                jnp.zeros((), jnp.int32))
+
+
+def build_model(cfg: ArchConfig, mesh=None) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(cfg, mesh, lm.init_decoder_lm, lm.lm_loss,
+                     lm.init_kv_cache, lm.lm_decode_step)
+    if fam == "ssm":
+        return Model(cfg, mesh, ssm_lm.init_ssm_lm, ssm_lm.ssm_lm_loss,
+                     ssm_lm.ssm_init_cache, ssm_lm.ssm_decode_step,
+                     _prefill=ssm_lm.ssm_prefill)
+    if fam == "hybrid":
+        return Model(cfg, mesh, hybrid.init_hybrid_lm, hybrid.hybrid_lm_loss,
+                     hybrid.hybrid_init_cache, hybrid.hybrid_decode_step,
+                     _prefill=hybrid.hybrid_prefill)
+    if fam == "audio":
+        return Model(cfg, mesh, encdec.init_encdec, encdec.encdec_loss,
+                     encdec.encdec_init_cache, encdec.encdec_decode_step,
+                     _prefill=encdec.encdec_prefill)
+    raise ValueError(f"unknown family: {fam}")

@@ -1,0 +1,24 @@
+"""Rotary position embeddings (supports partial-dim rotary for MLA)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    """(dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, dim) or (..., seq, dim); positions: (..., seq)."""
+    dim = x.shape[-1]
+    inv = rope_freqs(dim, theta)                       # (dim/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, dim/2)
+    if x.ndim == ang.ndim + 1:                         # heads axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .compression import (compress_local, compressed_psum_grads,
+                          compression_ratio, init_compression_state)
+from .schedule import cosine_with_warmup
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "compress_local",
+           "compressed_psum_grads", "compression_ratio",
+           "cosine_with_warmup", "global_norm", "init_compression_state"]

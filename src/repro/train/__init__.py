@@ -1,0 +1,5 @@
+from .loop import StragglerMonitor, TrainConfig, build_train_step, train
+from .probes import activation_probe
+
+__all__ = ["StragglerMonitor", "TrainConfig", "activation_probe",
+           "build_train_step", "train"]

@@ -1,0 +1,56 @@
+"""Subprocess helper: runs on 8 forced host devices; exits nonzero on
+mismatch between the SPMD dkpca and the reference simulator."""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import AxisType  # noqa: E402
+
+from repro.core import KernelSpec, build_setup, run_admm  # noqa: E402
+from repro.core.dkpca import dkpca_distributed  # noqa: E402
+from repro.core.topology import ring  # noqa: E402
+from repro.data import node_dataset  # noqa: E402
+
+
+def main():
+    mode = sys.argv[1] if len(sys.argv) > 1 else "exact"
+    spec = KernelSpec(kind="rbf", gamma=None)
+    j, n, m = 8, 16, 12
+    nodes, _ = node_dataset(j, n, m, seed=0)
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    alpha0 = jax.random.normal(jax.random.PRNGKey(0), (j, n), jnp.float32)
+    graph = ring(j, hops=2)
+
+    if mode == "exact":
+        center, use_pallas, project = "global", False, "ball"
+    elif mode == "pallas":
+        center, use_pallas, project = "global", True, "ball"
+    elif mode == "rescale":
+        center, use_pallas, project = "none", False, "rescale"
+    else:
+        raise SystemExit(f"unknown mode {mode}")
+
+    setup = build_setup(jnp.asarray(nodes), graph, spec, center=center)
+    sim = run_admm(setup, n_iters=10, alpha0=alpha0, project=project)
+    dist = dkpca_distributed(nodes, mesh, ("data", "model"), hops=2,
+                             spec=spec, center=center, n_iters=10,
+                             alpha0=alpha0, project=project,
+                             use_pallas=use_pallas)
+    a_s = np.asarray(sim.alpha)
+    a_d = np.asarray(dist.alpha)
+    err = np.abs(a_s - a_d).max()
+    scale = max(np.abs(a_s).max(), 1e-6)
+    print(f"mode={mode} max|diff|={err:.3e} scale={scale:.3e}")
+    assert err < 5e-3 * scale + 1e-4, f"mismatch: {err} vs scale {scale}"
+    assert np.isfinite(a_d).all()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

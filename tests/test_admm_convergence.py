@@ -1,0 +1,133 @@
+"""End-to-end tests of paper Alg. 1: convergence (Theorem 2), quality vs.
+the central solution (Figs 3-5 regime), and baseline orderings."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KernelSpec, RhoSchedule, build_setup, central_kpca,
+                        local_kpca, run_admm, similarity, theorem2_rho)
+from repro.core.topology import ring
+from repro.data import node_dataset
+
+SPEC = KernelSpec(kind="rbf", gamma=None)
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    nodes, pooled = node_dataset(n_nodes=8, n_per_node=60, m=24, seed=0)
+    graph = ring(8, hops=2)
+    setup = build_setup(jnp.asarray(nodes), graph, SPEC)
+    alpha_gt, _, _ = central_kpca(jnp.asarray(pooled), SPEC, 1,
+                                  gamma=setup.gamma)
+    return nodes, pooled, graph, setup, alpha_gt[:, 0]
+
+
+def _mean_similarity(alpha_nodes, nodes, pooled, alpha_gt, gamma):
+    sims = [
+        float(similarity(alpha_nodes[j], jnp.asarray(nodes[j]),
+                         alpha_gt, jnp.asarray(pooled), SPEC, gamma=gamma))
+        for j in range(nodes.shape[0])
+    ]
+    return float(np.mean(sims)), sims
+
+
+class TestConvergence:
+    def test_similarity_to_central(self, small_problem):
+        nodes, pooled, graph, setup, alpha_gt = small_problem
+        res = run_admm(setup, n_iters=30)
+        mean_sim, sims = _mean_similarity(res.alpha, nodes, pooled, alpha_gt,
+                                          setup.gamma)
+        # Paper Fig 3 reports > 0.9 similarity; small synthetic should match.
+        assert mean_sim > 0.85, f"mean similarity too low: {mean_sim}, {sims}"
+
+    def test_beats_local_baseline(self, small_problem):
+        nodes, pooled, graph, setup, alpha_gt = small_problem
+        res = run_admm(setup, n_iters=60)
+        sim_admm, _ = _mean_similarity(res.alpha, nodes, pooled, alpha_gt,
+                                       setup.gamma)
+        loc = local_kpca(jnp.asarray(nodes), SPEC, gamma=setup.gamma)
+        sim_local, _ = _mean_similarity(loc[..., 0], nodes, pooled, alpha_gt,
+                                        setup.gamma)
+        # Fig 4: consensus must improve over purely-local solutions.
+        assert sim_admm > sim_local - 1e-3, (sim_admm, sim_local)
+
+    def test_similarity_improves_over_iterations(self, small_problem):
+        nodes, pooled, graph, setup, alpha_gt = small_problem
+        res = run_admm(setup, n_iters=30)
+        early, _ = _mean_similarity(res.alpha_hist[0], nodes, pooled,
+                                    alpha_gt, setup.gamma)
+        late, _ = _mean_similarity(res.alpha_hist[-1], nodes, pooled,
+                                   alpha_gt, setup.gamma)
+        assert late > early
+
+    def test_primal_residual_decreases(self, small_problem):
+        _, _, _, setup, _ = small_problem
+        res = run_admm(setup, n_iters=40,
+                       rho2=RhoSchedule.constant(100.0))
+        r = np.asarray(res.primal_residual)
+        assert r[-1] < r[0] * 0.5
+
+
+class TestTheorem2:
+    def test_lagrangian_monotone_decrease(self, small_problem):
+        """Theorem 2: with Assumption-2 rho (and the exact Alg. 1 form,
+        include_self=False), the augmented Lagrangian decreases.
+
+        Reproduction note (see EXPERIMENTS.md §Paper-validation): the paper's
+        Lemma-4 step bounds ||d_eta||_F by ||d_eta E^T||_F, which can fail
+        under column cancellation far from consensus — and we indeed measure
+        a small transient increase in the first few iterations (<0.3% of
+        |L_0|), after which the decrease is strictly monotone. We assert the
+        *asymptotic* monotonicity (t >= 5) plus a bounded early transient.
+        """
+        nodes, _, graph, _, _ = small_problem
+        setup = build_setup(jnp.asarray(nodes), graph, SPEC,
+                            include_self=False)
+        rho = theorem2_rho(setup)
+        assert rho > 0
+        res = run_admm(setup, n_iters=40, rho2=RhoSchedule.constant(rho))
+        lag = np.asarray(res.lagrangian, np.float64)
+        diffs = np.diff(lag)
+        tol = 1e-4 * max(1.0, np.abs(lag).max())
+        assert (diffs[5:] <= tol).all(), f"Lagrangian increased late: {diffs}"
+        assert diffs.max() <= 1e-2 * abs(lag[0]), "early transient too large"
+        assert lag[-1] < lag[0] - 0.5 * (lag[0] - lag.min())  # overall drop
+
+    def test_small_rho_violates_monotonicity(self, small_problem):
+        """Sanity: the monotonicity *check* is not vacuous — with a tiny rho
+        the alpha-problem Hessian loses positive-definiteness and the
+        iteration diverges (non-monotone Lagrangian and/or blow-up)."""
+        nodes, _, graph, _, _ = small_problem
+        setup = build_setup(jnp.asarray(nodes), graph, SPEC,
+                            include_self=False)
+        res = run_admm(setup, n_iters=25, rho2=RhoSchedule.constant(1e-3))
+        lag = np.asarray(res.lagrangian, np.float64)
+        monotone = np.isfinite(lag).all() and (np.diff(lag) <= 1e-6).all()
+        assert not monotone
+
+
+class TestPaperMode:
+    def test_rho_schedule_mode_converges(self, small_problem):
+        """Paper §6.1 tuning: rho1=100 fixed, rho2 warm-up 10->50->100."""
+        nodes, pooled, graph, setup, alpha_gt = small_problem
+        res = run_admm(setup, n_iters=30, rho1=100.0,
+                       rho2=RhoSchedule((0, 10, 20), (10.0, 50.0, 100.0)))
+        mean_sim, _ = _mean_similarity(res.alpha, nodes, pooled, alpha_gt,
+                                       setup.gamma)
+        assert mean_sim > 0.85
+
+    def test_more_neighbors_not_worse(self):
+        """Fig 5 trend: larger |Omega| should not hurt final similarity."""
+        nodes, pooled = node_dataset(n_nodes=10, n_per_node=20, m=16, seed=1)
+        sims = []
+        for hops in (1, 2):
+            graph = ring(10, hops=hops)
+            setup = build_setup(jnp.asarray(nodes), graph, SPEC)
+            alpha_gt, _, _ = central_kpca(jnp.asarray(pooled), SPEC, 1,
+                                          gamma=setup.gamma)
+            res = run_admm(setup, n_iters=30)
+            s, _ = _mean_similarity(res.alpha, nodes, pooled,
+                                    alpha_gt[:, 0], setup.gamma)
+            sims.append(s)
+        assert sims[1] > sims[0] - 0.05, sims

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward/
+train step + one decode step on CPU, asserting output shapes and no NaNs.
+(The FULL configs are exercised only via the dry-run.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, concrete_train_batch, get_config
+from repro.models import build_model
+
+B, S = 2, 32
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name, smoke=True)
+            model = build_model(cfg)
+            params, axes = model.init(jax.random.PRNGKey(0))
+            cache[name] = (cfg, model, params, axes)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_loss(built, name):
+    cfg, model, params, axes = built(name)
+    batch = concrete_train_batch(cfg, B, S)
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss)), (name, float(loss))
+    assert float(loss) > 0
+    # CE at init should be near log(vocab)
+    assert abs(float(metrics["loss"]) - np.log(cfg.vocab)) < 2.5, \
+        (name, float(metrics["loss"]), np.log(cfg.vocab))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step(built, name):
+    cfg, model, params, axes = built(name)
+    batch = concrete_train_batch(cfg, B, S)
+
+    def loss_fn(p):
+        return model.loss(p, batch)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in grads.values()))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, name
+    # one SGD step must change the loss
+    params2 = {k: v - 0.1 * grads[k].astype(v.dtype)
+               for k, v in params.items()}
+    loss2 = loss_fn(params2)
+    assert np.isfinite(float(loss2))
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_step(built, name):
+    cfg, model, params, axes = built(name)
+    max_len = 16
+    if cfg.family == "audio":
+        batch = concrete_train_batch(cfg, B, 8)
+        logits, cache = model.prefill(params, batch, max_len)
+    else:
+        cache = model.init_cache(B, max_len)
+        logits = None
+    toks = jnp.zeros((B, 1), jnp.int32)
+    for step in range(3):
+        cache_len = jnp.asarray(8 + step if cfg.family == "audio" else step,
+                                jnp.int32)
+        logits, cache = model.decode_step(params, cache, toks, cache_len)
+        assert logits.shape == (B, cfg.vocab), (name, logits.shape)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), name
+        toks = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
+
+@pytest.mark.parametrize("name", ["llama3.2-3b", "mixtral-8x22b",
+                                  "falcon-mamba-7b", "zamba2-1.2b",
+                                  "deepseek-v2-236b"])
+def test_decode_matches_forward(built, name):
+    """Greedy decode logits must match the teacher-forced forward logits at
+    the same positions (cache correctness)."""
+    cfg, model, params, axes = built(name)
+    rng = np.random.default_rng(0)
+    s = 8
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, s), dtype=np.int32))
+
+    # forward logits via loss path is awkward; use prefill-style full pass:
+    cache = model.init_cache(B, 16)
+    # feed tokens one by one, collect logits
+    dec_logits = []
+    for t in range(s):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                      jnp.asarray(t, jnp.int32))
+        dec_logits.append(np.asarray(lg, np.float32))
+    dec_logits = np.stack(dec_logits, axis=1)       # (B, s, V)
+
+    # fresh cache, feed the whole prompt at once (prefill path)
+    cache2 = model.init_cache(B, 16)
+    lg_all, _ = model.decode_step(params, cache2, toks,
+                                  jnp.asarray(0, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_all, np.float32),
+                               dec_logits[:, -1], rtol=2e-2, atol=2e-2)
+
+
+def test_full_configs_param_counts():
+    """Full configs should be in the right parameter-count ballpark."""
+    expected = {
+        "llama3.2-3b": (2.5e9, 4.5e9),
+        "llama3-405b": (3.6e11, 4.6e11),
+        "qwen3-32b": (2.6e10, 4.0e10),
+        "phi4-mini-3.8b": (3.0e9, 5.0e9),
+        "deepseek-v2-236b": (1.9e11, 2.8e11),
+        "mixtral-8x22b": (1.2e11, 1.6e11),
+        "internvl2-76b": (6.3e10, 8.5e10),
+        "zamba2-1.2b": (0.9e9, 1.7e9),
+        "falcon-mamba-7b": (6.0e9, 8.5e9),
+    }
+    for name, (lo, hi) in expected.items():
+        n = get_config(name).n_params()
+        assert lo <= n <= hi, f"{name}: {n:.3e} not in [{lo:.1e}, {hi:.1e}]"

@@ -1,0 +1,129 @@
+"""Unit + property tests for kernel math (paper §1, §3.1, §6.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (KernelSpec, center_gram, central_kpca, gram,
+                        pairwise_sqdist, psd_jitter_eigh, resolve_gamma,
+                        topk_eigh)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return scale * np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+class TestPairwiseSqdist:
+    def test_matches_naive(self):
+        x, y = _rand((17, 5), 0), _rand((9, 5), 1)
+        d = pairwise_sqdist(jnp.asarray(x), jnp.asarray(y))
+        naive = ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
+        np.testing.assert_allclose(np.asarray(d), naive, rtol=1e-4, atol=1e-4)
+
+    def test_nonnegative_zero_diag(self):
+        x = _rand((32, 8), 2)
+        d = np.asarray(pairwise_sqdist(jnp.asarray(x), jnp.asarray(x)))
+        assert (d >= 0).all()
+        np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+
+
+class TestGram:
+    @pytest.mark.parametrize("kind", ["rbf", "linear", "poly"])
+    def test_normalized_diag_is_one(self, kind):
+        # Paper §3.1 requires K(x, x) = 1.
+        spec = KernelSpec(kind=kind, gamma=0.5, normalize=True)
+        x = _rand((20, 6), 3)
+        k = np.asarray(gram(spec, jnp.asarray(x)))
+        np.testing.assert_allclose(np.diag(k), 1.0, atol=1e-4)
+
+    @pytest.mark.parametrize("kind", ["rbf", "linear"])
+    def test_symmetric_psd(self, kind):
+        spec = KernelSpec(kind=kind, gamma=0.3)
+        x = _rand((24, 4), 4)
+        k = np.asarray(gram(spec, jnp.asarray(x)))
+        np.testing.assert_allclose(k, k.T, atol=1e-5)
+        ev = np.linalg.eigvalsh(k)
+        assert ev.min() > -1e-4
+
+    def test_rbf_values(self):
+        spec = KernelSpec(kind="rbf", gamma=0.25)
+        x = np.array([[0.0, 0.0], [1.0, 1.0]], np.float32)
+        k = np.asarray(gram(spec, jnp.asarray(x)))
+        np.testing.assert_allclose(k[0, 1], np.exp(-0.25 * 2.0), rtol=1e-5)
+
+    def test_median_heuristic_positive(self):
+        x = _rand((50, 10), 5)
+        g = float(resolve_gamma(KernelSpec(kind="rbf"), jnp.asarray(x)))
+        assert g > 0
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(3, 24), m=st.integers(1, 12), seed=st.integers(0, 99))
+    def test_property_rbf_range_and_psd(self, n, m, seed):
+        x = _rand((n, m), seed)
+        k = np.asarray(gram(KernelSpec(kind="rbf", gamma=0.7), jnp.asarray(x)))
+        assert (k <= 1.0 + 1e-5).all() and (k >= 0.0).all()
+        assert np.linalg.eigvalsh(k).min() > -1e-4
+
+
+class TestCentering:
+    def test_row_col_means_zero(self):
+        x = _rand((15, 7), 6)
+        k = gram(KernelSpec(gamma=0.4), jnp.asarray(x))
+        kc = np.asarray(center_gram(k))
+        np.testing.assert_allclose(kc.mean(0), 0.0, atol=1e-5)
+        np.testing.assert_allclose(kc.mean(1), 0.0, atol=1e-5)
+
+    def test_idempotent(self):
+        x = _rand((12, 5), 7)
+        k = gram(KernelSpec(gamma=0.4), jnp.asarray(x))
+        k1 = center_gram(k)
+        k2 = center_gram(k1)
+        np.testing.assert_allclose(np.asarray(k1), np.asarray(k2), atol=1e-5)
+
+    def test_rectangular_block(self):
+        x, y = _rand((10, 4), 8), _rand((6, 4), 9)
+        k = gram(KernelSpec(gamma=0.4), jnp.asarray(x), jnp.asarray(y))
+        kc = np.asarray(center_gram(k))
+        assert kc.shape == (10, 6)
+        np.testing.assert_allclose(kc.mean(), 0.0, atol=1e-5)
+
+
+class TestEigh:
+    def test_topk_matches_numpy(self):
+        a = _rand((16, 16), 10)
+        a = a @ a.T
+        lam, vec = topk_eigh(jnp.asarray(a), 3)
+        ref = np.linalg.eigvalsh(a)[::-1][:3]
+        np.testing.assert_allclose(np.asarray(lam), ref, rtol=1e-3)
+        for i in range(3):
+            v = np.asarray(vec[:, i])
+            np.testing.assert_allclose(a @ v, ref[i] * v, rtol=2e-2, atol=1e-3)
+
+    def test_jitter_floors_spectrum(self):
+        a = np.zeros((8, 8), np.float32)
+        a[0, 0] = 4.0  # rank-1
+        lam, _ = psd_jitter_eigh(jnp.asarray(a), rel_eps=1e-3)
+        assert float(lam[0]) >= 1e-3 * 4.0 - 1e-6
+
+
+class TestCentralKpca:
+    def test_alpha_normalization(self):
+        # Paper §1: ||alpha|| = 1/sqrt(lambda_1) so that ||w*|| = 1.
+        x = jnp.asarray(_rand((30, 6), 11))
+        alpha, lam, k = central_kpca(x, KernelSpec(gamma=0.3), 2)
+        for i in range(2):
+            n = float(jnp.linalg.norm(alpha[:, i]))
+            np.testing.assert_allclose(n, 1.0 / np.sqrt(float(lam[i])), rtol=1e-4)
+            # ||w||^2 = alpha^T K alpha = 1
+            w2 = float(alpha[:, i] @ k @ alpha[:, i])
+            np.testing.assert_allclose(w2, 1.0, rtol=1e-3)
+
+    def test_first_component_dominates_variance(self):
+        x = jnp.asarray(_rand((40, 5), 12))
+        alpha, lam, k = central_kpca(x, KernelSpec(gamma=0.3), 3)
+        # projections variance == eigenvalue ordering
+        assert float(lam[0]) >= float(lam[1]) >= float(lam[2]) > 0

@@ -1,0 +1,63 @@
+"""Beyond-paper top-k deflation vs central top-k components."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KernelSpec, build_setup, central_kpca, similarity
+from repro.core.deflation import run_admm_topk
+from repro.core.topology import ring
+from repro.data import node_dataset
+
+SPEC = KernelSpec(kind="rbf")
+
+
+@pytest.fixture(scope="module")
+def topk_problem():
+    nodes, pooled = node_dataset(8, 80, m=32, seed=2)
+    graph = ring(8, hops=2)
+    setup = build_setup(jnp.asarray(nodes), graph, SPEC)
+    alpha_gt, lam, _ = central_kpca(jnp.asarray(pooled), SPEC, 4,
+                                    gamma=setup.gamma)
+    return nodes, pooled, setup, alpha_gt
+
+
+def test_topk_matches_central(topk_problem):
+    nodes, pooled, setup, alpha_gt = topk_problem
+    alphas = run_admm_topk(setup, k=2, n_iters=40)
+
+    def msim(a, comp):
+        return float(np.mean([
+            float(similarity(a[j], jnp.asarray(nodes[j]), alpha_gt[:, comp],
+                             jnp.asarray(pooled), SPEC, gamma=setup.gamma))
+            for j in range(nodes.shape[0])]))
+
+    s1 = msim(alphas[0], 0)
+    assert s1 > 0.9, s1
+    # The 2nd/3rd central eigenvalues are near-degenerate on this data, so
+    # per-component matching is ill-posed for any solver; the well-posed
+    # check is CONTAINMENT: our 2-D component subspace must lie inside the
+    # central top-3 subspace (mean principal-angle cosine per node).
+    from repro.core import subspace_alignment
+    align = float(np.mean([
+        float(subspace_alignment(
+            jnp.stack([alphas[0][j], alphas[1][j]], axis=1),
+            jnp.asarray(nodes[j]), alpha_gt[:, :3], jnp.asarray(pooled),
+            SPEC, gamma=setup.gamma))
+        for j in range(nodes.shape[0])]))
+    assert align > 0.85, align
+    # deflated component must NOT align with the first
+    cross = msim(alphas[1], 0)
+    assert cross < 0.5, cross
+
+
+def test_components_mutually_orthogonal(topk_problem):
+    nodes, pooled, setup, _ = topk_problem
+    alphas = run_admm_topk(setup, k=2, n_iters=40)
+    # w1^T w2 in feature space per node: alpha1 K_j alpha2 (normalized)
+    k = setup.k
+    num = jnp.einsum("jn,jnm,jm->j", alphas[0], k, alphas[1])
+    d1 = jnp.einsum("jn,jnm,jm->j", alphas[0], k, alphas[0])
+    d2 = jnp.einsum("jn,jnm,jm->j", alphas[1], k, alphas[1])
+    cos = np.abs(np.asarray(num / jnp.sqrt(d1 * d2 + 1e-12)))
+    assert cos.max() < 0.25, cos

@@ -1,0 +1,109 @@
+"""Fault tolerance: node-failure re-knit convergence, train-loop
+checkpoint/restart determinism, NaN-guard skip, straggler monitor."""
+
+import logging
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import (KernelSpec, build_setup, central_kpca, run_admm,
+                        similarity)
+from repro.core.topology import reknit, ring
+from repro.data import node_dataset
+from repro.data.tokens import TokenStream
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.train import StragglerMonitor, TrainConfig, train
+from repro.train.loop import build_train_step
+
+SPEC = KernelSpec(kind="rbf")
+
+
+class TestNodeFailure:
+    def test_reknit_converges_on_survivors(self):
+        """Kill 2 of 12 nodes; survivors re-knit and still reach the
+        (surviving-data) central solution — the decentralized algorithm has
+        no fusion center to lose."""
+        nodes, _ = node_dataset(12, 40, m=24, seed=4)
+        graph = ring(12, hops=2)
+        g2, survivors = reknit(graph, [3, 7])
+        nodes2 = np.asarray(nodes)[survivors]
+        pooled2 = nodes2.reshape(-1, nodes2.shape[-1])
+        setup = build_setup(jnp.asarray(nodes2), g2, SPEC)
+        ag, _, _ = central_kpca(jnp.asarray(pooled2), SPEC, 1,
+                                gamma=setup.gamma)
+        res = run_admm(setup, n_iters=40)
+        sims = [float(similarity(res.alpha[j], jnp.asarray(nodes2[j]),
+                                 ag[:, 0], jnp.asarray(pooled2), SPEC,
+                                 gamma=setup.gamma))
+                for j in range(len(survivors))]
+        assert np.mean(sims) > 0.85, sims
+
+
+def _tiny_cfg():
+    return ArchConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=1, d_ff=64, vocab=128,
+                      head_dim=16, tie_embeddings=True, remat="none",
+                      param_dtype="float32", compute_dtype="float32")
+
+
+class TestCheckpointRestart:
+    def test_resume_is_deterministic(self, tmp_path):
+        """Train 6 steps straight vs. 3 steps + kill + resume 3 steps: the
+        final params must be bitwise identical (data iterator state is part
+        of the checkpoint)."""
+        cfg = _tiny_cfg()
+        opt = AdamWConfig(lr=1e-2)
+
+        def run(steps, ckpt_dir, fresh):
+            model = build_model(cfg)
+            data = TokenStream(vocab=cfg.vocab, batch=2, seq=16, seed=1)
+            tcfg = TrainConfig(steps=steps, ckpt_dir=ckpt_dir, ckpt_every=3,
+                               log_every=0)
+            state, _ = train(model, opt, data, tcfg)
+            return state
+
+        s_straight = run(6, str(tmp_path / "a"), True)
+        # interrupted run: first 3 steps (checkpoint at 3), then resume to 6
+        run(3, str(tmp_path / "b"), True)
+        s_resumed = run(6, str(tmp_path / "b"), False)
+        for k in s_straight["params"]:
+            np.testing.assert_array_equal(
+                np.asarray(s_straight["params"][k]),
+                np.asarray(s_resumed["params"][k]), err_msg=k)
+
+    def test_nan_guard_skips_bad_step(self):
+        cfg = _tiny_cfg()
+        model = build_model(cfg)
+        _, step_fn = build_train_step(model, AdamWConfig(lr=1e-2))
+        init_fn, _ = build_train_step(model, AdamWConfig(lr=1e-2))
+        state, _ = init_fn(jax.random.PRNGKey(0))
+        good = TokenStream(vocab=cfg.vocab, batch=2, seq=16, seed=0).next_batch()
+        before = np.asarray(state["params"]["embed"])
+        # poison the embedding gradient path via a NaN label trick: feed
+        # out-of-range labels -> gather produces garbage but finite; instead
+        # poison params to force a NaN loss
+        bad_state = dict(state)
+        bad_state["params"] = dict(state["params"])
+        bad_state["params"]["final_norm"] = state["params"][
+            "final_norm"] * jnp.nan
+        new_state, metrics = step_fn(bad_state, good)
+        assert bool(metrics["skipped"])
+        # parameters unchanged for skipped step
+        np.testing.assert_array_equal(
+            np.asarray(new_state["params"]["embed"]),
+            np.asarray(bad_state["params"]["embed"]))
+
+
+class TestStraggler:
+    def test_monitor_flags_slow_steps(self):
+        m = StragglerMonitor(factor=3.0)
+        for _ in range(10):
+            m.record(0.1)
+        assert m.record(0.5) is True
+        assert m.flagged == 1
+        assert m.record(0.11) is False

@@ -1,0 +1,39 @@
+"""DKPCA activation probe (the paper's technique as a training feature)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+from repro.train import activation_probe
+
+
+def test_probe_single_device_fallback():
+    cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=48,
+                     n_heads=2, n_kv_heads=1, d_ff=96, vocab=256,
+                     head_dim=24, tie_embeddings=True, remat="none",
+                     param_dtype="float32", compute_dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(96, 16), dtype=np.int32))}
+    out = activation_probe(params, batch, mesh=None, samples_per_node=16,
+                           n_iters=6)
+    assert not out["skipped"]
+    assert np.isfinite(out["consensus_residual"])
+    assert out["participation_mean"] > 0
+    assert out["participation_cv"] >= 0
+
+
+def test_probe_skips_tiny_batches():
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=16,
+                     n_heads=1, n_kv_heads=1, d_ff=32, vocab=64, head_dim=16,
+                     tie_embeddings=True, remat="none",
+                     param_dtype="float32", compute_dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((4, 8), jnp.int32)}
+    out = activation_probe(params, batch, mesh=None)
+    assert out["skipped"]

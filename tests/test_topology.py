@@ -1,0 +1,95 @@
+"""Tests for the consensus-graph module (paper Assumption 1 + fault tolerance)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (complete, from_adjacency, random_connected,
+                                 reknit, ring, ring_shifts)
+
+
+class TestRing:
+    def test_paper_setting_four_neighbors(self):
+        g = ring(20, hops=2)  # the paper's "4 closest neighbors"
+        assert (g.degrees == 4).all()
+        assert g.nbr[0] == (18, 19, 1, 2)
+
+    def test_shift_order_matches_slots(self):
+        g = ring(10, hops=3)
+        shifts = ring_shifts(3)
+        for j in range(10):
+            assert list(g.nbr[j]) == [(j + s) % 10 for s in shifts]
+
+    def test_rev_slots(self):
+        g = ring(8, 2)
+        for j in range(8):
+            for d, l in enumerate(g.nbr[j]):
+                assert g.nbr[l][g.rev[j][d]] == j
+
+    def test_too_small_raises(self):
+        with pytest.raises(ValueError):
+            ring(4, hops=2)
+
+    @settings(max_examples=15, deadline=None)
+    @given(j=st.integers(5, 40), hops=st.integers(1, 2))
+    def test_property_connected_regular(self, j, hops):
+        g = ring(j, hops)
+        assert g.connected() and g.is_regular
+
+
+class TestOtherGraphs:
+    def test_complete(self):
+        g = complete(5)
+        assert (g.degrees == 4).all()
+
+    def test_random_connected(self):
+        for seed in range(5):
+            g = random_connected(12, 0.3, seed)
+            assert g.connected()
+
+    def test_from_adjacency_asymmetric_raises(self):
+        a = np.zeros((3, 3), bool)
+        a[0, 1] = True
+        with pytest.raises(ValueError):
+            from_adjacency(a)
+
+    def test_neighbor_array_masking(self):
+        g = random_connected(9, 0.2, seed=3)
+        ids, rev, mask = g.neighbor_array()
+        assert mask.sum() == g.degrees.sum()
+        for j in range(9):
+            assert list(ids[j][mask[j]]) == list(g.nbr[j])
+
+
+class TestReknit:
+    def test_single_failure(self):
+        g = ring(12, 2)
+        g2, survivors = reknit(g, [5])
+        assert g2.n_nodes == 11
+        assert g2.connected()
+        assert 5 not in survivors
+
+    def test_adjacent_block_failure(self):
+        g = ring(16, 2)
+        g2, survivors = reknit(g, [3, 4, 5, 6])
+        assert g2.n_nodes == 12
+        assert g2.connected()
+
+    def test_cut_vertex_path_graph(self):
+        # path-ish graph where removing the middle disconnects
+        adj = np.zeros((5, 5), bool)
+        for i in range(4):
+            adj[i, i + 1] = adj[i + 1, i] = True
+        g = from_adjacency(adj)
+        g2, _ = reknit(g, [2])
+        assert g2.connected()
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 50))
+    def test_property_survivors_connected(self, seed):
+        rng = np.random.default_rng(seed)
+        g = ring(14, 2)
+        dead = rng.choice(14, size=3, replace=False)
+        g2, survivors = reknit(g, dead)
+        assert g2.connected()
+        assert len(survivors) == 11
