@@ -1,0 +1,98 @@
+"""Serving benchmark: batched kPCA projection engine vs per-query dispatch.
+
+Reports queries/s throughput and p50/p99 request latency as a function of
+(a) engine batch width and (b) landmark count after Nystrom compression.
+The acceptance bar for the subsystem is >= 2x throughput for the batched
+engine vs one-query-at-a-time projection at batch 64 (on CPU the win is
+dispatch amortization; on TPU it is additionally MXU utilization — a (1, L)
+kernel row leaves 127/128 MXU lanes idle).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KernelSpec, oos
+from repro.data import kpca_dataset
+from repro.serve import KpcaEngine, KpcaServeConfig
+
+SPEC = KernelSpec(kind="rbf")
+
+
+def _fit(n=512, m=128, c=2, seed=0):
+    x = jnp.asarray(kpca_dataset(n, m=m, seed=seed))
+    return oos.fit_central(x, SPEC, n_components=c, center=True)
+
+
+def _queries(n, m, seed=1):
+    return kpca_dataset(n, m=m, seed=seed)
+
+
+def _per_query_baseline(model, queries, n_probe=64):
+    """One jitted projection call per single query (B=1 serving)."""
+    proj = jax.jit(lambda mm, xq: oos.project(mm, xq))
+    jax.block_until_ready(proj(model, jnp.asarray(queries[:1])))  # compile
+    t0 = time.perf_counter()
+    for i in range(n_probe):
+        jax.block_until_ready(proj(model, jnp.asarray(queries[i:i + 1])))
+    dt = time.perf_counter() - t0
+    return n_probe / dt, dt / n_probe * 1e6       # qps, us/query
+
+
+def bench_serve_kpca(m: int = 128):
+    rows = []
+    n_train, n_queries = 512, 1024
+    model = _fit(n=n_train, m=m)
+    queries = _queries(n_queries, m)
+
+    qps_b1, us_b1 = _per_query_baseline(model, queries)
+    rows.append(("serve/per_query", us_b1, f"qps={qps_b1:.0f};batch=1"))
+
+    # ---- throughput & latency vs engine batch width ----------------------
+    for batch in (16, 64, 128):
+        cfg = KpcaServeConfig(max_batch=batch, min_bucket=8)
+        eng = KpcaEngine(model, cfg)
+        for b in cfg.buckets():                       # warm every bucket:
+            eng.project_many([queries[:b]])           # one flush per width
+        eng.stats = type(eng.stats)()                 # steady-state stats
+        # request mix: many small requests (latency) + bulk (throughput)
+        rng = np.random.default_rng(batch)
+        sizes = rng.integers(1, 17, size=64).tolist() + [256, 256]
+        off, reqs = 0, []
+        for q in sizes:
+            reqs.append(np.take(queries, range(off, off + q), axis=0,
+                                mode="wrap"))
+            off += q
+        eng.project_many(reqs)
+        st = eng.stats
+        p50, p99 = st.latency_percentiles()
+        qps = st.queries_per_s
+        speedup = qps / max(qps_b1, 1e-9)
+        rows.append((f"serve/batch{batch}", 1e6 / max(qps, 1e-9),
+                     f"qps={qps:.0f};p50_ms={p50 * 1e3:.2f};"
+                     f"p99_ms={p99 * 1e3:.2f};speedup_vs_per_query="
+                     f"{speedup:.1f}x;compiles={st.n_compiles}"))
+
+    # ---- throughput & accuracy vs landmark count -------------------------
+    bulk = [queries]                                  # one big request
+    for n_l in (64, 128, 256, n_train):
+        cm, err = oos.compress(model, n_l, seed=0)
+        eng = KpcaEngine(cm, KpcaServeConfig(max_batch=64, min_bucket=8))
+        eng.project_many(bulk)                        # compile
+        eng.stats = type(eng.stats)()                 # reset after warmup
+        eng.project_many(bulk)
+        qps = eng.stats.queries_per_s
+        rows.append((f"serve/landmarks{n_l}", 1e6 / max(qps, 1e-9),
+                     f"qps={qps:.0f};rel_err={float(np.max(err)):.1e};"
+                     f"support={n_l}/{n_train}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in bench_serve_kpca():
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

@@ -26,6 +26,7 @@ from benchmarks.bench_kpca import (bench_runtime_vs_central,  # noqa: E402
                                    bench_similarity_vs_nodes,
                                    bench_similarity_vs_samples)
 from benchmarks.bench_roofline import bench_roofline_summary  # noqa: E402
+from benchmarks.bench_serve_kpca import bench_serve_kpca  # noqa: E402
 
 SUITES = {
     "fig3": bench_similarity_vs_nodes,
@@ -34,6 +35,7 @@ SUITES = {
     "rt": bench_runtime_vs_central,
     "kernels": lambda: bench_gram_kernel() + bench_centering_kernel(),
     "roofline": bench_roofline_summary,
+    "serve": bench_serve_kpca,
 }
 
 
@@ -47,7 +49,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in names:
         fn = SUITES[name]
-        if args.quick and name in ("fig3", "fig4", "fig5", "rt"):
+        if args.quick and name in ("fig3", "fig4", "fig5", "rt", "serve"):
             rows = fn(m=64)
         else:
             rows = fn()

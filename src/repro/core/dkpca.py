@@ -39,6 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .admm import initial_alpha  # noqa: F401  (same init semantics)
 from .kernels_math import KernelSpec, gram, psd_jitter_eigh, resolve_gamma
 from .rho import RhoSchedule
+from ..distributed.compat import pvary, shard_map
 from .topology import ring_shifts
 
 
@@ -111,7 +112,7 @@ def dkpca_distributed(
                  rho_self=rho_self, project=project, n_iters=n_iters,
                  use_pallas=use_pallas, message_dtype=message_dtype,
                  unroll_iters=unroll_iters)
-    shmap = jax.shard_map(
+    shmap = shard_map(
         fn, mesh=mesh,
         in_specs=(P(axis_names, None, None), P(axis_names, None), P(), P()),
         out_specs=(P(axis_names, None), P(None, axis_names, None),
@@ -158,8 +159,8 @@ def _node_fn(x_blk, a_blk, g, rho2_arr, *, axes, j_nodes, offsets, rev_static,
             rot = _ring_recv(rot, axes, 1, j_nodes)
             return (rot, macc, mubar), None
 
-        zero_n = jax.lax.pvary(jnp.zeros((n,), jnp.float32), axes)
-        zero_s = jax.lax.pvary(jnp.zeros((), jnp.float32), axes)
+        zero_n = pvary(jnp.zeros((n,), jnp.float32), axes)
+        zero_s = pvary(jnp.zeros((), jnp.float32), axes)
         (_, macc, mubar), _ = jax.lax.scan(
             sweep, (x, zero_n, zero_s), None, length=j_nodes)
         m_own = macc / (j_nodes * n)                       # m(x) for own rows
@@ -245,7 +246,7 @@ def _node_fn(x_blk, a_blk, g, rho2_arr, *, axes, j_nodes, offsets, rev_static,
             b_n = b_n * gain
         return (alpha_n, b_n), (alpha_n, jnp.sqrt(res2), znorm2)
 
-    b0 = jax.lax.pvary(jnp.zeros((n, s_slots), jnp.float32), axes)
+    b0 = pvary(jnp.zeros((n, s_slots), jnp.float32), axes)
     (alpha_f, _), (ahist, rhist, znhist) = jax.lax.scan(
         iteration, (alpha, b0), jnp.arange(n_iters), unroll=unroll_iters)
     return (alpha_f[None], ahist[:, None, :], rhist, znhist[:, None])

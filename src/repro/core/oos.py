@@ -1,0 +1,253 @@
+"""Out-of-sample projection: the fitted-model artifact for serving kPCA.
+
+The product of the whole fitting pipeline (central eigensolve, Alg.-1 ADMM
+consensus, or top-k deflation) is a set of dual coefficient vectors; what a
+*serving* system needs is the centered out-of-sample score (paper §1):
+
+    score_c(x') = (w*)^T phi_c(x')
+                = sum_i alpha_i [K(x_i, x') - m(x') - m_i + mu_bar]
+
+with m(x') = mean_t K(x', t) over the training set, m_i = mean_t K(x_i, t)
+and mu_bar the grand mean (the same ``kernel_mean_stats`` quantities the
+decentralized fit centers with). Grouping terms, every model this module
+produces — centered, uncentered, or landmark-compressed — serves through ONE
+formula:
+
+    score(x') = K(x', X_s) @ coefs + mean_l K(x', x_l) * row_mean_coef + bias
+
+i.e. a single (B, L) kernel block against the support set X_s with a fused
+row-mean + bias epilogue. ``repro.kernels.project`` implements exactly this
+contract as a tiled Pallas kernel; this module is the numerical ground truth
+and the artifact container.
+
+Landmark compression (``compress``) projects each component w = Phi(X) a_eff
+onto span{phi(z_l)} of L landmarks (Nystrom, in the spirit of Balcan et
+al.'s communication-efficient distributed kPCA): beta = K_ZZ^+ K_ZX a_eff.
+Because it is an orthogonal projection in the RKHS, the reconstruction error
+||w - w_hat||_H is computable exactly at compress time (returned alongside
+the model) and is monotonically non-increasing in L for nested landmark
+sets, which ``landmark_schedule``'s fixed-seed prefixes guarantee.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels_math import KernelSpec, gram, resolve_gamma
+
+
+@dataclasses.dataclass(frozen=True)
+class FittedKpca:
+    """Servable kPCA model: support set + dual coefficients + centering.
+
+    x_support:     (L, M) training samples or landmarks.
+    coefs:         (L, C) dual coefficients, one column per component.
+    row_mean_coef: (C,) weight of mean_l K(x', x_l) in the score
+                   (``-sum_i alpha_i`` for a centered fit; 0 otherwise).
+    bias:          (C,) constant score offset (``mu_bar sum_i alpha_i
+                   - m . alpha`` for a centered fit; 0 otherwise).
+    gamma:         () resolved RBF bandwidth actually used at fit time.
+    spec:          kernel spec (static pytree metadata).
+    """
+
+    x_support: jax.Array
+    coefs: jax.Array
+    row_mean_coef: jax.Array
+    bias: jax.Array
+    gamma: jax.Array
+    spec: KernelSpec = KernelSpec()
+
+    @property
+    def n_support(self) -> int:
+        return self.x_support.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.x_support.shape[1]
+
+    @property
+    def n_components(self) -> int:
+        return self.coefs.shape[1]
+
+
+def _flatten(m: FittedKpca):
+    return ((m.x_support, m.coefs, m.row_mean_coef, m.bias, m.gamma),
+            m.spec)
+
+
+def _unflatten(spec, leaves):
+    return FittedKpca(*leaves, spec=spec)
+
+
+jax.tree_util.register_pytree_node(FittedKpca, _flatten, _unflatten)
+
+
+def _as_2d(alpha: jax.Array) -> jax.Array:
+    alpha = jnp.asarray(alpha)
+    return alpha[:, None] if alpha.ndim == 1 else alpha
+
+
+def from_dual(x_train: jax.Array, alpha: jax.Array, spec: KernelSpec,
+              gamma: Optional[jax.Array] = None,
+              center: bool = True) -> FittedKpca:
+    """Build the artifact from any dual solution alpha (N,) or (N, C).
+
+    For ``center=True`` the *uncentered* training Gram is formed once here
+    (fit-time cost) to extract the kernel mean statistics the centered score
+    needs; serving never touches the training Gram again.
+    """
+    x_train = jnp.asarray(x_train)
+    alpha = _as_2d(alpha).astype(jnp.float32)
+    g = resolve_gamma(spec, x_train) if gamma is None else jnp.asarray(gamma)
+    c = alpha.shape[1]
+    if center:
+        k_raw = gram(spec, x_train, gamma=g)
+        m = jnp.mean(k_raw, axis=1)                       # (N,)
+        mu_bar = jnp.mean(k_raw)
+        alpha_sum = jnp.sum(alpha, axis=0)                # (C,)
+        row_mean_coef = -alpha_sum
+        bias = mu_bar * alpha_sum - m @ alpha
+    else:
+        row_mean_coef = jnp.zeros((c,), jnp.float32)
+        bias = jnp.zeros((c,), jnp.float32)
+    return FittedKpca(x_support=x_train, coefs=alpha,
+                      row_mean_coef=row_mean_coef, bias=bias,
+                      gamma=g.astype(jnp.float32), spec=spec)
+
+
+def fit_central(x: jax.Array, spec: KernelSpec, n_components: int = 1,
+                center: bool = True,
+                gamma: Optional[jax.Array] = None) -> FittedKpca:
+    """Fit central kPCA (paper problem (2)) and package it for serving."""
+    from .central import central_kpca
+    x = jnp.asarray(x)
+    g = resolve_gamma(spec, x) if gamma is None else jnp.asarray(gamma)
+    alpha, _, _ = central_kpca(x, spec, n_components, center=center, gamma=g)
+    return from_dual(x, alpha, spec, gamma=g, center=center)
+
+
+def from_decentralized(x_nodes: jax.Array,
+                       alpha: Union[jax.Array, Sequence[jax.Array]],
+                       spec: KernelSpec, gamma: Optional[jax.Array] = None,
+                       center: bool = True) -> FittedKpca:
+    """Package an Alg.-1 consensus solution for serving.
+
+    x_nodes: (J, N, M); alpha: (J, N) from ``run_admm`` or a list of (J, N)
+    from ``run_admm_topk``. At consensus every node's w_j = phi(X_j) alpha_j
+    approximates the same global component, so the pooled dual vector
+    concat_j(alpha_j) / J represents their average on the pooled support
+    set. ``center=True`` matches fits built with ``build_setup(...,
+    center="global")`` (same global kernel-mean statistics).
+    """
+    x_nodes = jnp.asarray(x_nodes)
+    j, n, m = x_nodes.shape
+    if not isinstance(alpha, (list, tuple)):
+        alpha = [alpha]
+    pooled_alpha = jnp.stack(
+        [jnp.reshape(a, (j * n,)) for a in alpha], axis=1) / j
+    return from_dual(x_nodes.reshape(j * n, m), pooled_alpha, spec,
+                     gamma=gamma, center=center)
+
+
+def project(model: FittedKpca, x_query: jax.Array,
+            use_pallas: bool = False,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Centered out-of-sample scores for a query batch: (B, M) -> (B, C)."""
+    x_query = jnp.asarray(x_query)
+    if use_pallas:
+        from ..kernels.project import project_op
+        return project_op(model.spec, x_query, model.x_support, model.coefs,
+                          row_mean_coef=model.row_mean_coef, bias=model.bias,
+                          gamma=model.gamma, interpret=interpret)
+    k = gram(model.spec, x_query, model.x_support, gamma=model.gamma)
+    return (k @ model.coefs
+            + jnp.mean(k, axis=1, keepdims=True) * model.row_mean_coef[None]
+            + model.bias[None, :])
+
+
+def effective_coefs(model: FittedKpca) -> jax.Array:
+    """Fold the row-mean term into the dual coefficients:
+    mean_l K(x', x_l) * c == K(x', X_s) @ (c/L * 1), so
+    w = Phi(X_s) @ (coefs + row_mean_coef / L). Used by compression."""
+    return model.coefs + model.row_mean_coef[None, :] / model.n_support
+
+
+def landmark_schedule(n_support: int, seed: int = 0) -> np.ndarray:
+    """Fixed random permutation of the support set; taking prefixes of it
+    yields NESTED landmark sets, so compression error is monotone in L."""
+    return np.random.default_rng(seed).permutation(n_support)
+
+
+def compress(model: FittedKpca, n_landmarks: int,
+             seed: int = 0, rel_thresh: float = 1e-7
+             ) -> Tuple[FittedKpca, jax.Array]:
+    """Nystrom landmark compression of the support set.
+
+    Projects each component w = Phi(X_s) a_eff onto span{phi(z_l)} of
+    ``n_landmarks`` support points: beta = K_ZZ^+ K_ZX a_eff. Serving cost
+    per query drops from O(L_full * M) to O(n_landmarks * M).
+
+    Returns (compressed model, rel_err (C,)) with
+    rel_err_c = ||w_c - w_hat_c||_H / ||w_c||_H, exact (computed from the
+    Pythagorean identity for the RKHS projection).
+    """
+    l_full = model.n_support
+    if not 0 < n_landmarks <= l_full:
+        raise ValueError(f"n_landmarks={n_landmarks} not in [1, {l_full}]")
+    idx = landmark_schedule(l_full, seed)[:n_landmarks]
+    z = model.x_support[jnp.asarray(idx)]
+    a_eff = effective_coefs(model)
+
+    kzz = gram(model.spec, z, gamma=model.gamma)
+    kzx = gram(model.spec, z, model.x_support, gamma=model.gamma)
+    t = kzx @ a_eff                                      # (L, C) = Phi(Z)^T w
+    lam, v = jnp.linalg.eigh(kzz)
+    inv = jnp.where(lam > rel_thresh * jnp.maximum(lam[-1], 1e-30),
+                    1.0 / lam, 0.0)
+    beta = v @ (inv[:, None] * (v.T @ t))                # K_ZZ^+ Phi(Z)^T w
+
+    kxx = gram(model.spec, model.x_support, gamma=model.gamma)
+    w2 = jnp.sum(a_eff * (kxx @ a_eff), axis=0)          # ||w||_H^2
+    wh2 = jnp.sum(beta * (kzz @ beta), axis=0)           # ||w_hat||_H^2
+    rel_err = jnp.sqrt(jnp.clip(w2 - wh2, 0.0) / jnp.maximum(w2, 1e-30))
+
+    compressed = FittedKpca(
+        x_support=z, coefs=beta,
+        row_mean_coef=jnp.zeros_like(model.row_mean_coef),
+        bias=model.bias, gamma=model.gamma, spec=model.spec)
+    return compressed, rel_err
+
+
+# ---- persistence (repro.checkpoint layout) --------------------------------
+
+def save_fitted(ckpt_dir: str, model: FittedKpca) -> str:
+    """Write the artifact with the atomic checkpoint writer (step 0)."""
+    from ..checkpoint import save_checkpoint
+    tree = {"x_support": model.x_support, "coefs": model.coefs,
+            "row_mean_coef": model.row_mean_coef, "bias": model.bias,
+            "gamma": model.gamma}
+    meta = {"kind": "fitted_kpca", "spec": dataclasses.asdict(model.spec)}
+    return save_checkpoint(ckpt_dir, 0, tree, metadata=meta, keep_last=1)
+
+
+def load_fitted(ckpt_dir: str) -> FittedKpca:
+    from ..checkpoint import restore_checkpoint
+    tree, meta, _ = restore_checkpoint(ckpt_dir)
+    if meta.get("kind") != "fitted_kpca":
+        raise ValueError(f"{ckpt_dir} is not a FittedKpca checkpoint: {meta}")
+    spec = KernelSpec(**meta["spec"])
+    return FittedKpca(x_support=tree["x_support"], coefs=tree["coefs"],
+                      row_mean_coef=tree["row_mean_coef"],
+                      bias=tree["bias"], gamma=tree["gamma"], spec=spec)
+
+
+__all__ = [
+    "FittedKpca", "compress", "effective_coefs", "fit_central", "from_dual",
+    "from_decentralized", "landmark_schedule", "load_fitted", "project",
+    "save_fitted",
+]

@@ -1,0 +1,31 @@
+"""jax version compatibility for SPMD primitives.
+
+``jax.shard_map`` (with the ``check_vma`` kwarg) only exists on newer jax;
+older releases ship ``jax.experimental.shard_map.shard_map`` whose
+equivalent kwarg is ``check_rep``. Resolve one callable with the NEW
+surface (mesh/in_specs/out_specs/check_vma keywords) for all call sites.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:
+    # Older jax has no varying-mesh-axes tracking; pvary is bookkeeping
+    # only, so identity is exact.
+    def pvary(x, axis_name):
+        del axis_name
+        return x
+
+__all__ = ["pvary", "shard_map"]

@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .._compat import CompilerParams
 
 
 def _center_kernel(row_ref, col_ref, tot_ref, k_ref, o_ref):
@@ -42,7 +43,7 @@ def center_tiles(k: jax.Array, row_mean: jax.Array, col_mean: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_n, block_k), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(row_mean, col_mean, tot_mean, k)

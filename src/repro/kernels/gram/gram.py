@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .._compat import CompilerParams
 
 
 def _gram_kernel(sx_ref, sy_ref, gamma_ref, x_ref, y_ref, o_ref, *,
@@ -96,7 +97,7 @@ def gram_tiles(x: jax.Array, y: jax.Array, sx: jax.Array, sy: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_n, block_k), lambda i, j, b: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(sx, sy, gamma, x, y)

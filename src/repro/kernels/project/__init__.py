@@ -1,0 +1,4 @@
+from .ops import project_op
+from .ref import project_reference
+
+__all__ = ["project_op", "project_reference"]

@@ -1,0 +1,82 @@
+"""Jitted public wrapper around the projection Pallas kernel.
+
+Handles padding to block multiples (features zero-pad exactly; padded
+support rows carry zero coefficients AND a zero entry in the fused ones-
+column, so they contribute nothing to scores or row-means; padded query
+rows are sliced off), sq-norm/self-kernel precomputation, component-axis
+padding to the 128-lane boundary, gamma resolution and backend dispatch
+(interpret=True everywhere except real TPU)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.kernels_math import KernelSpec, resolve_gamma, _self_k
+from ..gram.ops import _on_tpu, _pad_to, _round_up
+from .project import project_tiles
+
+
+def project_op(spec: KernelSpec, x_query: jax.Array, x_support: jax.Array,
+               coefs: jax.Array,
+               row_mean_coef: Optional[jax.Array] = None,
+               bias: Optional[jax.Array] = None,
+               gamma: Optional[jax.Array] = None,
+               block_q: int = 128, block_l: int = 128, block_m: int = 512,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """scores = K(x_query, x_support) @ coefs + rowmean(K) * c + b, fused.
+
+    x_query (B, M); x_support (L, M); coefs (L, C); row_mean_coef/bias (C,)
+    (default zero: raw uncentered projection). Returns (B, C) float32.
+    Matches ``repro.kernels.project.ref.project_reference`` (tested across
+    shapes in tests/test_oos_projection.py).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b_n, m = x_query.shape
+    l, c = coefs.shape
+    assert x_support.shape == (l, m), (x_query.shape, x_support.shape,
+                                       coefs.shape)
+    if row_mean_coef is None:
+        row_mean_coef = jnp.zeros((c,), jnp.float32)
+    if bias is None:
+        bias = jnp.zeros((c,), jnp.float32)
+
+    if spec.kind == "rbf":
+        g = resolve_gamma(spec, x_support) if gamma is None \
+            else jnp.asarray(gamma)
+        sq = jnp.sum(x_query.astype(jnp.float32) ** 2, axis=-1)
+        ss = jnp.sum(x_support.astype(jnp.float32) ** 2, axis=-1)
+    else:
+        g = jnp.zeros((), jnp.float32)
+        sq = _self_k(spec, x_query.astype(jnp.float32))
+        ss = _self_k(spec, x_support.astype(jnp.float32))
+
+    # adapt block sizes for small problems (interpret/test shapes)
+    bq = min(block_q, _round_up(b_n, 8))
+    bl = min(block_l, _round_up(l, 8))
+    bm = min(block_m, _round_up(m, 128))
+    cp = _round_up(c + 1, 128)
+
+    xq = _pad_to(_pad_to(x_query, bm, 1), bq, 0)
+    xs = _pad_to(_pad_to(x_support, bm, 1), bl, 0)
+    sqp = _pad_to(sq, bq, 0)
+    ssp = _pad_to(ss, bl, 0)
+    # A extended with the row-sum ones-column at index c (zero on padded
+    # support rows), then padded to (L_pad, CP).
+    ones = jnp.ones((l, 1), jnp.float32)
+    a_ext = jnp.concatenate([coefs.astype(jnp.float32), ones], axis=1)
+    a_ext = _pad_to(_pad_to(a_ext, cp, 1), bl, 0)
+    c_ext = _pad_to(row_mean_coef.astype(jnp.float32), cp, 0)
+    b_ext = _pad_to(bias.astype(jnp.float32), cp, 0)
+
+    out = project_tiles(
+        xq, xs, a_ext, sqp, ssp,
+        jnp.reshape(g, (1,)).astype(jnp.float32),
+        jnp.full((1,), 1.0 / l, jnp.float32), c_ext, b_ext,
+        kind=spec.kind, degree=spec.degree, coef=spec.coef, scale=spec.scale,
+        normalize=spec.normalize, block_q=bq, block_l=bl, block_m=bm,
+        sum_col=c, interpret=interpret)
+    return out[:b_n, :c]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the projection Pallas kernel — same score contract
+as ``repro.core.oos.project`` (single source of numerical truth)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.kernels_math import KernelSpec, gram
+
+
+def project_reference(spec: KernelSpec, x_query: jax.Array,
+                      x_support: jax.Array, coefs: jax.Array,
+                      row_mean_coef: Optional[jax.Array] = None,
+                      bias: Optional[jax.Array] = None,
+                      gamma: Optional[jax.Array] = None) -> jax.Array:
+    k = gram(spec, x_query, x_support, gamma=gamma)
+    out = k @ coefs
+    if row_mean_coef is not None:
+        out = out + jnp.mean(k, axis=1, keepdims=True) * row_mean_coef[None]
+    if bias is not None:
+        out = out + bias[None, :]
+    return out

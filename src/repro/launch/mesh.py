@@ -1,22 +1,33 @@
 """Production mesh definition (per assignment spec).
 
 A FUNCTION, not a module-level constant: importing this module never touches
-jax device state (the dry-run sets XLA_FLAGS before first jax init)."""
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+``jax.sharding.AxisType`` (and ``jax.make_mesh``'s ``axis_types`` kwarg)
+only exist on newer jax; on older releases every mesh axis is implicitly
+Auto, so omitting the kwarg is equivalent.
+"""
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+
+    def _axis_kw(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:  # older jax: all axes are Auto by default
+    def _axis_kw(n_axes: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / examples / elastic restore)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes), **_axis_kw(len(axes)))

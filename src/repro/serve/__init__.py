@@ -1,3 +1,6 @@
 from .engine import DecodeEngine, ServeConfig
+from .kpca_engine import (EngineStats, KpcaEngine, KpcaServeConfig,
+                          RequestStats)
 
-__all__ = ["DecodeEngine", "ServeConfig"]
+__all__ = ["DecodeEngine", "EngineStats", "KpcaEngine", "KpcaServeConfig",
+           "RequestStats", "ServeConfig"]

@@ -1,0 +1,33 @@
+"""Optional-``hypothesis`` shim for the test suite.
+
+The property-based tests use hypothesis when it is installed (see
+requirements-dev.txt); without it, only the ``@given`` tests are skipped —
+the rest of each module still runs. Import from here instead of hypothesis:
+
+    from _hyp import given, settings, st
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis absent
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _AnyStrategy:
+        """Stands in for ``strategies.*`` calls made at decoration time."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -9,9 +9,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
 
 from repro.core import KernelSpec, build_setup, run_admm  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.core.dkpca import dkpca_distributed  # noqa: E402
 from repro.core.topology import ring  # noqa: E402
 from repro.data import node_dataset  # noqa: E402
@@ -22,8 +22,7 @@ def main():
     spec = KernelSpec(kind="rbf", gamma=None)
     j, n, m = 8, 16, 12
     nodes, _ = node_dataset(j, n, m, seed=0)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     alpha0 = jax.random.normal(jax.random.PRNGKey(0), (j, n), jnp.float32)
     graph = ring(j, hops=2)
 

@@ -11,9 +11,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs.base import ArchConfig  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.data.tokens import TokenStream  # noqa: E402
 from repro.distributed.sharding import default_rules  # noqa: E402
 from repro.models import build_model  # noqa: E402
@@ -26,8 +27,7 @@ def check_dp_equivalence():
                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
                      head_dim=16, tie_embeddings=True, remat="none",
                      param_dtype="float32", compute_dtype="float32")
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     rules = default_rules(multi_pod=False)
     data = TokenStream(vocab=cfg.vocab, batch=8, seq=16, seed=0)
     batch = data.next_batch()
@@ -64,8 +64,7 @@ def check_moe_sharded_vs_ref():
                      n_heads=2, n_kv_heads=1, d_ff=64, vocab=64,
                      head_dim=16, n_experts=8, top_k=2, d_ff_expert=32,
                      param_dtype="float32", compute_dtype="float32")
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     col = ParamCollector(jax.random.PRNGKey(0), jnp.float32)
     init_moe(col, cfg, "moe")
     p = {k[len("moe/"):]: v for k, v in col.params.items()}
@@ -79,7 +78,7 @@ def check_moe_sharded_vs_ref():
 
 def check_compressed_psum():
     from repro.optim import compressed_psum_grads, init_compression_state
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     rng = np.random.default_rng(0)
     # per-shard gradients: shared low-rank signal + per-worker noise
     u = rng.normal(size=(8, 16, 3)).astype(np.float32)
@@ -93,7 +92,8 @@ def check_compressed_psum():
         out, new_state = compressed_psum_grads({"w": g_loc}, st, mesh)
         return out["w"], new_state["w"]["p"], new_state["w"]["err"]
 
-    f = jax.jit(jax.shard_map(
+    from repro.distributed.compat import shard_map
+    f = jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=(P("data", None, None), P(None, None), P(None, None)),
         out_specs=(P(None, None), P(None, None), P(None, None)),

@@ -106,14 +106,14 @@ class TestCheckpoint:
             import os
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch.mesh import make_mesh
             from repro.checkpoint import save_checkpoint, restore_checkpoint
             d = r"{tmp_path}"
             tree = {{"w": jnp.arange(64.0).reshape(8, 8)}}
             save_checkpoint(d, 1, tree)
             for shape in [(4, 2), (8, 1), (2, 4)]:
-                mesh = jax.make_mesh(shape, ("data", "model"),
-                                     axis_types=(AxisType.Auto,) * 2)
+                mesh = make_mesh(shape, ("data", "model"))
                 sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
                 out, _, _ = restore_checkpoint(d, shardings=sh)
                 assert out["w"].sharding.mesh.shape["data"] == shape[0]

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.topology import (complete, from_adjacency, random_connected,
                                  reknit, ring, ring_shifts)
