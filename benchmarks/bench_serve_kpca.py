@@ -92,6 +92,40 @@ def bench_serve_kpca(m: int = 128):
     return rows
 
 
+def bench_serve_sharded(m: int = 128):
+    """Shard-count x per-shard-landmark sweep for sharded serving.
+
+    Each row serves one bulk request through a ``KpcaEngine`` over a
+    ``ShardedFittedKpca`` (shard_map + psum when the host exposes enough
+    devices — ``benchmarks/run.py --host-devices`` controls that on CPU —
+    else the same-math single-device reduction). ``err_bound`` is the
+    aggregate relative RKHS error bound of per-shard Nystrom compression;
+    0 means no compression.
+    """
+    rows = []
+    n_train, n_queries = 512, 512
+    model = _fit(n=n_train, m=m)
+    bulk = [jnp.asarray(_queries(n_queries, m))]
+    n_dev = jax.device_count()
+    for n_shards in (1, 2, 4):
+        for n_l in (None, 128, 64):
+            sharded, bound = oos.shard_fitted(model, n_shards,
+                                              landmarks_per_shard=n_l)
+            eng = KpcaEngine(sharded,
+                             KpcaServeConfig(max_batch=128, min_bucket=8))
+            eng.project_many(bulk)                    # compile + warm
+            eng.stats = type(eng.stats)()
+            eng.project_many(bulk)
+            qps = eng.stats.queries_per_s
+            lm = "full" if n_l is None else str(n_l)
+            rows.append((
+                f"serve/shards{n_shards}_lm{lm}", 1e6 / max(qps, 1e-9),
+                f"qps={qps:.0f};err_bound={float(np.max(bound)):.1e};"
+                f"support={sharded.n_support};"
+                f"devices={min(n_shards, n_dev)}"))
+    return rows
+
+
 if __name__ == "__main__":
     print("name,us_per_call,derived")
     for row in bench_serve_kpca():

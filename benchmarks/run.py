@@ -1,61 +1,120 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--smoke] \
+        [--only fig3,...] [--json out.json] [--host-devices N]
 
 Paper tables/figures:
     fig3  similarity vs #nodes          (bench_kpca.bench_similarity_vs_nodes)
     fig4  similarity vs local samples   (bench_kpca.bench_similarity_vs_samples)
     fig5  similarity vs #neighbors      (bench_kpca.bench_similarity_vs_neighbors)
     rt    runtime vs central kPCA       (bench_kpca.bench_runtime_vs_central)
-plus kernel micro-benches and the roofline summary from the dry-run."""
+plus kernel micro-benches, the roofline summary from the dry-run, and the
+serving suites (``serve`` batched engine, ``shard`` sharded multi-device
+sweep).
+
+``--smoke`` is the CI entry point: the fast suites (kernels/serve/shard) at
+quick dims, with results also written as JSON (default bench-smoke.json) for
+artifact upload. ``--host-devices N`` exposes N host CPU devices before jax
+initializes so the ``shard`` suite runs on a real mesh off-TPU; argument
+parsing therefore happens BEFORE the benchmark modules (which import jax at
+module scope) are loaded.
+"""
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)                      # `python benchmarks/run.py ...`
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
-from benchmarks.bench_kernels import (bench_centering_kernel,  # noqa: E402
-                                      bench_gram_kernel)
-from benchmarks.bench_kpca import (bench_runtime_vs_central,  # noqa: E402
-                                   bench_similarity_vs_neighbors,
-                                   bench_similarity_vs_nodes,
-                                   bench_similarity_vs_samples)
-from benchmarks.bench_roofline import bench_roofline_summary  # noqa: E402
-from benchmarks.bench_serve_kpca import bench_serve_kpca  # noqa: E402
+ALL_SUITES = ["fig3", "fig4", "fig5", "rt", "kernels", "roofline", "serve",
+              "shard"]
+QUICK_DIM_SUITES = ("fig3", "fig4", "fig5", "rt", "serve", "shard")
+SMOKE_SUITES = ["kernels", "serve", "shard"]
 
-SUITES = {
-    "fig3": bench_similarity_vs_nodes,
-    "fig4": bench_similarity_vs_samples,
-    "fig5": bench_similarity_vs_neighbors,
-    "rt": bench_runtime_vs_central,
-    "kernels": lambda: bench_gram_kernel() + bench_centering_kernel(),
-    "roofline": bench_roofline_summary,
-    "serve": bench_serve_kpca,
-}
+
+def _parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite subset")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller feature dim for fast CI runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: fast suites at quick dims + JSON output")
+    ap.add_argument("--json", default=None,
+                    help="write rows as JSON to this path "
+                         "(default bench-smoke.json under --smoke)")
+    ap.add_argument("--host-devices", type=int, default=4,
+                    help="host CPU devices to expose for the shard suite "
+                         "(0 = leave XLA_FLAGS untouched)")
+    return ap.parse_args()
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller feature dim for fast CI runs")
-    args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(SUITES)
+    args = _parse_args()
+    quick = args.quick or args.smoke
+    if args.only:
+        names = args.only.split(",")
+    elif args.smoke:
+        names = list(SMOKE_SUITES)
+    else:
+        names = ALL_SUITES
+
+    # Force host devices only when the shard suite actually runs — the
+    # other suites' timings should see the unmodified environment.
+    if "shard" in names and args.host_devices > 0 and \
+            "xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}"
+        ).strip()
+
+    # Import AFTER the XLA flag is set: these modules import jax at module
+    # scope, and the flag must precede backend initialization.
+    from benchmarks.bench_kernels import (bench_centering_kernel,
+                                          bench_gram_kernel)
+    from benchmarks.bench_kpca import (bench_runtime_vs_central,
+                                       bench_similarity_vs_neighbors,
+                                       bench_similarity_vs_nodes,
+                                       bench_similarity_vs_samples)
+    from benchmarks.bench_roofline import bench_roofline_summary
+    from benchmarks.bench_serve_kpca import (bench_serve_kpca,
+                                             bench_serve_sharded)
+
+    suites = {
+        "fig3": bench_similarity_vs_nodes,
+        "fig4": bench_similarity_vs_samples,
+        "fig5": bench_similarity_vs_neighbors,
+        "rt": bench_runtime_vs_central,
+        "kernels": lambda: bench_gram_kernel() + bench_centering_kernel(),
+        "roofline": bench_roofline_summary,
+        "serve": bench_serve_kpca,
+        "shard": bench_serve_sharded,
+    }
+
+    assert list(suites) == ALL_SUITES, "keep ALL_SUITES in sync"
+    results = []
     print("name,us_per_call,derived")
     for name in names:
-        fn = SUITES[name]
-        if args.quick and name in ("fig3", "fig4", "fig5", "rt", "serve"):
-            rows = fn(m=64)
-        else:
-            rows = fn()
+        fn = suites[name]
+        rows = fn(m=64) if quick and name in QUICK_DIM_SUITES else fn()
         for row in rows:
             print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            results.append({"name": row[0], "us_per_call": float(row[1]),
+                            "derived": row[2]})
         sys.stdout.flush()
+
+    json_path = args.json or ("bench-smoke.json" if args.smoke else None)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"suites": names, "rows": results}, f, indent=2)
+        print(f"wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Markdown link checker (stdlib only; CI step + pre-merge hygiene).
+
+Scans every tracked ``*.md`` at the repo root, under ``docs/``, and under
+``.github/`` for inline links/images ``[text](target)`` and verifies that
+each RELATIVE target resolves to an existing file or directory (external
+``http(s)://`` / ``mailto:`` links and pure ``#anchor`` self-references are
+skipped; a ``path#anchor`` target is checked for the file part only).
+
+    python scripts/check_links.py [root]
+
+Exit code 1 with one line per broken link when anything is missing.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — no nesting, stop at first closing paren; tolerate an
+# optional "title" suffix after the path.
+_LINK = re.compile(r"\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_md_files(root: pathlib.Path):
+    yield from sorted(root.glob("*.md"))
+    for sub in ("docs", ".github"):
+        d = root / sub
+        if d.is_dir():
+            yield from sorted(d.rglob("*.md"))
+
+
+def strip_code(text: str) -> str:
+    """Blank out fenced code blocks and inline code spans — link syntax
+    inside code samples is not a reference that can rot. Newlines inside
+    fences are preserved so reported line numbers stay correct."""
+    text = re.sub(r"```.*?```",
+                  lambda m: "\n" * m.group(0).count("\n"), text, flags=re.S)
+    return re.sub(r"`[^`\n]*`", "", text)
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path):
+    broken = []
+    for lineno, line in enumerate(strip_code(path.read_text()).splitlines(),
+                                  start=1):
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            # NB: lstrip — `root / "/abs"` would discard root entirely.
+            resolved = (root / rel.lstrip("/")) if rel.startswith("/") \
+                else (path.parent / rel)
+            if not resolved.exists():
+                broken.append(
+                    f"{path.relative_to(root)}:{lineno}: broken link "
+                    f"-> {target}")
+    return broken
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 \
+        else pathlib.Path(__file__).resolve().parent.parent
+    broken, n_files = [], 0
+    for md in iter_md_files(root):
+        n_files += 1
+        broken.extend(check_file(md, root))
+    if broken:
+        print("\n".join(broken))
+        print(f"\n{len(broken)} broken link(s) across {n_files} files")
+        return 1
+    print(f"link-check OK: {n_files} markdown files, no broken relative "
+          f"links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

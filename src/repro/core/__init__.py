@@ -9,12 +9,13 @@ from .kernels_math import (KernelSpec, center_gram, center_gram_global, gram,
                            topk_eigh)
 from .local import local_kpca, neighborhood_kpca
 from .metrics import similarity, subspace_alignment
-from .oos import FittedKpca
+from .oos import FittedKpca, ShardedFittedKpca
 from .rho import RhoSchedule, assumption2_rho, auto_rho
 from . import oos, topology
 
 __all__ = [
     "DkpcaResult", "DkpcaSetup", "FittedKpca", "KernelSpec", "RhoSchedule",
+    "ShardedFittedKpca",
     "admm_iteration", "assumption2_rho", "augmented_lagrangian", "auto_rho",
     "build_setup", "center_gram", "center_gram_global", "central_kpca",
     "gram", "kpca_project", "local_kpca", "metrics", "neighborhood_kpca",

@@ -40,6 +40,10 @@ import numpy as np
 
 from .kernels_math import KernelSpec, gram, resolve_gamma
 
+# Shape conventions used throughout this module:
+#   B = query batch, M = features, L = support rows, C = components,
+#   S = shards, Lp = per-shard padded support capacity.
+
 
 @dataclasses.dataclass(frozen=True)
 class FittedKpca:
@@ -95,7 +99,20 @@ def _as_2d(alpha: jax.Array) -> jax.Array:
 def from_dual(x_train: jax.Array, alpha: jax.Array, spec: KernelSpec,
               gamma: Optional[jax.Array] = None,
               center: bool = True) -> FittedKpca:
-    """Build the artifact from any dual solution alpha (N,) or (N, C).
+    """Build the serving artifact from any dual solution.
+
+    Args:
+      x_train: (N, M) training samples — become the support set.
+      alpha: (N,) or (N, C) dual coefficients (central eigensolve, ADMM
+        consensus, deflation — anything living in the dual space).
+      spec: kernel spec used at fit time.
+      gamma: () fit-time RBF bandwidth; resolved from ``spec`` (median
+        heuristic on ``x_train``) when None.
+      center: True => bake the centered-score terms (row_mean_coef/bias)
+        from the kernel mean statistics.
+
+    Returns:
+      ``FittedKpca`` with coefs (N, C) float32.
 
     For ``center=True`` the *uncentered* training Gram is formed once here
     (fit-time cost) to extract the kernel mean statistics the centered score
@@ -123,7 +140,16 @@ def from_dual(x_train: jax.Array, alpha: jax.Array, spec: KernelSpec,
 def fit_central(x: jax.Array, spec: KernelSpec, n_components: int = 1,
                 center: bool = True,
                 gamma: Optional[jax.Array] = None) -> FittedKpca:
-    """Fit central kPCA (paper problem (2)) and package it for serving."""
+    """Fit central kPCA (paper problem (2)) and package it for serving.
+
+    Args:
+      x: (N, M) pooled training data.
+      spec/gamma/center: as in ``from_dual``.
+      n_components: C, number of kernel principal components to keep.
+
+    Returns:
+      ``FittedKpca`` with support (N, M) and coefs (N, C).
+    """
     from .central import central_kpca
     x = jnp.asarray(x)
     g = resolve_gamma(spec, x) if gamma is None else jnp.asarray(gamma)
@@ -157,7 +183,21 @@ def from_decentralized(x_nodes: jax.Array,
 def project(model: FittedKpca, x_query: jax.Array,
             use_pallas: bool = False,
             interpret: Optional[bool] = None) -> jax.Array:
-    """Centered out-of-sample scores for a query batch: (B, M) -> (B, C)."""
+    """Centered out-of-sample scores for a query batch.
+
+    Args:
+      model: fitted artifact (support set (L, M), coefs (L, C)).
+      x_query: (B, M) query batch.
+      use_pallas: route through the fused Pallas kernel
+        (``repro.kernels.project.project_op``) instead of the dense jnp
+        oracle below; both implement the same one-formula contract.
+      interpret: forwarded to the Pallas wrapper (default: interpret
+        everywhere except real TPU).
+
+    Returns:
+      (B, C) float32 scores
+      ``K(x_query, X_s) @ coefs + rowmean(K) * row_mean_coef + bias``.
+    """
     x_query = jnp.asarray(x_query)
     if use_pallas:
         from ..kernels.project import project_op
@@ -171,16 +211,42 @@ def project(model: FittedKpca, x_query: jax.Array,
 
 
 def effective_coefs(model: FittedKpca) -> jax.Array:
-    """Fold the row-mean term into the dual coefficients:
+    """Fold the row-mean term into the dual coefficients.
+
     mean_l K(x', x_l) * c == K(x', X_s) @ (c/L * 1), so
-    w = Phi(X_s) @ (coefs + row_mean_coef / L). Used by compression."""
+    w = Phi(X_s) @ (coefs + row_mean_coef / L). Returns the (L, C) folded
+    coefficients; used by ``compress`` and per-shard compression in
+    ``shard_fitted`` (the folded form has no row-mean term left to center).
+    """
     return model.coefs + model.row_mean_coef[None, :] / model.n_support
 
 
 def landmark_schedule(n_support: int, seed: int = 0) -> np.ndarray:
-    """Fixed random permutation of the support set; taking prefixes of it
-    yields NESTED landmark sets, so compression error is monotone in L."""
+    """Fixed random permutation (length ``n_support``) of support indices;
+    taking prefixes of it yields NESTED landmark sets, so compression error
+    is monotone non-increasing in the landmark count for a fixed seed."""
     return np.random.default_rng(seed).permutation(n_support)
+
+
+def _nystrom_project(spec: KernelSpec, gamma: jax.Array, x: jax.Array,
+                     a_eff: jax.Array, idx, rel_thresh: float
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project w = Phi(x) a_eff onto span{phi(x[idx])} in the RKHS.
+
+    Returns (z, beta, wh2): landmarks z = x[idx], landmark coefficients
+    beta = K_ZZ^+ K_ZX a_eff, and wh2_c = ||w_hat_c||_H^2 (exact — used with
+    ||w||_H^2 and the Pythagorean identity to get the projection error).
+    """
+    z = x[jnp.asarray(idx)]
+    kzz = gram(spec, z, gamma=gamma)
+    kzx = gram(spec, z, x, gamma=gamma)
+    t = kzx @ a_eff                                      # (L, C) = Phi(Z)^T w
+    lam, v = jnp.linalg.eigh(kzz)
+    inv = jnp.where(lam > rel_thresh * jnp.maximum(lam[-1], 1e-30),
+                    1.0 / lam, 0.0)
+    beta = v @ (inv[:, None] * (v.T @ t))                # K_ZZ^+ Phi(Z)^T w
+    wh2 = jnp.sum(beta * (kzz @ beta), axis=0)           # ||w_hat||_H^2
+    return z, beta, wh2
 
 
 def compress(model: FittedKpca, n_landmarks: int,
@@ -192,28 +258,27 @@ def compress(model: FittedKpca, n_landmarks: int,
     ``n_landmarks`` support points: beta = K_ZZ^+ K_ZX a_eff. Serving cost
     per query drops from O(L_full * M) to O(n_landmarks * M).
 
-    Returns (compressed model, rel_err (C,)) with
-    rel_err_c = ||w_c - w_hat_c||_H / ||w_c||_H, exact (computed from the
-    Pythagorean identity for the RKHS projection).
+    Args:
+      model: fitted artifact to compress.
+      n_landmarks: landmark count in [1, model.n_support].
+      seed: landmark-schedule seed; same seed => nested landmark sets.
+      rel_thresh: relative eigenvalue cutoff for the K_ZZ pseudo-inverse.
+
+    Returns:
+      (compressed model, rel_err (C,)) with
+      rel_err_c = ||w_c - w_hat_c||_H / ||w_c||_H, exact (computed from the
+      Pythagorean identity for the RKHS projection).
     """
     l_full = model.n_support
     if not 0 < n_landmarks <= l_full:
         raise ValueError(f"n_landmarks={n_landmarks} not in [1, {l_full}]")
     idx = landmark_schedule(l_full, seed)[:n_landmarks]
-    z = model.x_support[jnp.asarray(idx)]
     a_eff = effective_coefs(model)
-
-    kzz = gram(model.spec, z, gamma=model.gamma)
-    kzx = gram(model.spec, z, model.x_support, gamma=model.gamma)
-    t = kzx @ a_eff                                      # (L, C) = Phi(Z)^T w
-    lam, v = jnp.linalg.eigh(kzz)
-    inv = jnp.where(lam > rel_thresh * jnp.maximum(lam[-1], 1e-30),
-                    1.0 / lam, 0.0)
-    beta = v @ (inv[:, None] * (v.T @ t))                # K_ZZ^+ Phi(Z)^T w
+    z, beta, wh2 = _nystrom_project(model.spec, model.gamma, model.x_support,
+                                    a_eff, idx, rel_thresh)
 
     kxx = gram(model.spec, model.x_support, gamma=model.gamma)
     w2 = jnp.sum(a_eff * (kxx @ a_eff), axis=0)          # ||w||_H^2
-    wh2 = jnp.sum(beta * (kzz @ beta), axis=0)           # ||w_hat||_H^2
     rel_err = jnp.sqrt(jnp.clip(w2 - wh2, 0.0) / jnp.maximum(w2, 1e-30))
 
     compressed = FittedKpca(
@@ -223,10 +288,212 @@ def compress(model: FittedKpca, n_landmarks: int,
     return compressed, rel_err
 
 
+# ---- sharded artifact (multi-device serving) ------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedFittedKpca:
+    """Device-sharded servable kPCA model (support-set partition).
+
+    The projection score is a sum over support points, so it shards
+    embarrassingly: shard j holds a contiguous slice of the support set and
+    the matching dual-coefficient rows, computes the raw partial
+    ``K(x', X_j) @ coefs_j`` plus the raw kernel row-sum (via the indicator
+    column), and partials are psum-reduced across shards. The global
+    centering terms — row-mean weight and bias, which depend on the FULL
+    support set — are applied exactly once after the reduction
+    (``finalize_partial_scores``). ``repro.serve.sharded`` is the execution
+    path (shard_map over a device mesh, with a same-math single-device
+    fallback).
+
+    x_support:     (S, Lp, M) per-shard support slices, zero-padded to the
+                   common per-shard capacity Lp.
+    coefs_ext:     (S, Lp, C+1) per-shard coefficient rows; column C is the
+                   valid-row indicator (1.0 on real rows, 0.0 on padding),
+                   which makes each shard's raw kernel row-sum come out as
+                   one extra column of the same matmul.
+    row_mean_coef: (C,) global centering weight (zeros for models built
+                   with per-shard landmark compression — the row-mean term
+                   is folded into the coefficients first).
+    bias:          (C,) global score offset, applied once post-reduction.
+    gamma:         () fit-time RBF bandwidth, shared by all shards.
+    n_support:     total TRUE support rows across shards (static; the 1/L
+                   of the row-mean term).
+    shard_sizes:   per-shard true row counts (static).
+    spec:          kernel spec (static pytree metadata).
+    """
+
+    x_support: jax.Array
+    coefs_ext: jax.Array
+    row_mean_coef: jax.Array
+    bias: jax.Array
+    gamma: jax.Array
+    n_support: int
+    shard_sizes: Tuple[int, ...]
+    spec: KernelSpec = KernelSpec()
+
+    @property
+    def n_shards(self) -> int:
+        return self.x_support.shape[0]
+
+    @property
+    def shard_capacity(self) -> int:
+        return self.x_support.shape[1]
+
+    @property
+    def n_features(self) -> int:
+        return self.x_support.shape[2]
+
+    @property
+    def n_components(self) -> int:
+        return self.coefs_ext.shape[2] - 1
+
+
+def _flatten_sharded(m: ShardedFittedKpca):
+    return ((m.x_support, m.coefs_ext, m.row_mean_coef, m.bias, m.gamma),
+            (m.n_support, m.shard_sizes, m.spec))
+
+
+def _unflatten_sharded(aux, leaves):
+    n_support, shard_sizes, spec = aux
+    return ShardedFittedKpca(*leaves, n_support=n_support,
+                             shard_sizes=shard_sizes, spec=spec)
+
+
+jax.tree_util.register_pytree_node(ShardedFittedKpca, _flatten_sharded,
+                                   _unflatten_sharded)
+
+
+def finalize_partial_scores(partials: jax.Array, row_mean_coef: jax.Array,
+                            bias: jax.Array, n_support: int) -> jax.Array:
+    """Global centering epilogue for reduced per-shard partials.
+
+    Args:
+      partials: (B, C+1) SUM over shards of ``K(x', X_j) @ coefs_ext_j`` —
+        columns :C raw scores, column C the raw kernel row-sum over all
+        true support rows.
+      row_mean_coef: (C,) global centering weight.
+      bias: (C,) global score offset.
+      n_support: total true support rows (turns the row-sum into the mean).
+
+    Returns:
+      (B, C) final scores — identical to ``project`` on the gathered model.
+    """
+    c = partials.shape[-1] - 1
+    kmean = partials[:, c] / n_support
+    return (partials[:, :c] + kmean[:, None] * row_mean_coef[None, :]
+            + bias[None, :])
+
+
+def shard_fitted(model: FittedKpca, n_shards: int,
+                 landmarks_per_shard: Optional[int] = None, seed: int = 0,
+                 rel_thresh: float = 1e-7
+                 ) -> Tuple[ShardedFittedKpca, jax.Array]:
+    """Partition a ``FittedKpca`` across ``n_shards`` for sharded serving.
+
+    The support set (and the matching dual-coefficient rows) is split into
+    contiguous row slices; uneven L is handled by zero-padding every shard
+    to the largest slice, with the indicator column zeroed on padding rows
+    so padded rows contribute nothing to scores or row-sums.
+
+    With ``landmarks_per_shard`` set, each shard's slice of the EFFECTIVE
+    coefficients (row-mean term folded in — see ``effective_coefs``) is
+    Nystrom-compressed onto min(landmarks_per_shard, shard size) landmarks
+    chosen by a per-shard fixed-seed schedule (nested across landmark
+    counts), in the spirit of the per-node subsampling of
+    communication-efficient distributed kPCA (Balcan et al.) / COKE.
+
+    Args:
+      model: fitted artifact to shard.
+      n_shards: shard count S in [1, model.n_support].
+      landmarks_per_shard: per-shard landmark budget; None = no compression.
+      seed: base seed for the per-shard landmark schedules.
+      rel_thresh: pseudo-inverse cutoff (see ``compress``).
+
+    Returns:
+      (sharded model, rel_err_bound (C,)). The bound is the aggregate
+      relative RKHS error sum_j ||w_j - w_hat_j||_H / ||w||_H — each
+      per-shard term is exact (Pythagorean identity) and the sum bounds the
+      error of the summed component by the triangle inequality. Zeros when
+      no compression is requested (sharding alone is exact).
+    """
+    l_full, c = model.n_support, model.n_components
+    if not 0 < n_shards <= l_full:
+        raise ValueError(f"n_shards={n_shards} not in [1, {l_full}]")
+    splits = np.array_split(np.arange(l_full), n_shards)
+
+    if landmarks_per_shard is None:
+        parts = [(np.asarray(model.x_support[jnp.asarray(ix)]),
+                  np.asarray(model.coefs[jnp.asarray(ix)])) for ix in splits]
+        row_mean_coef, bias = model.row_mean_coef, model.bias
+        rel_err = jnp.zeros((c,), jnp.float32)
+    else:
+        if landmarks_per_shard < 1:
+            raise ValueError(f"landmarks_per_shard={landmarks_per_shard} < 1")
+        a_eff = effective_coefs(model)
+        kxx = gram(model.spec, model.x_support, gamma=model.gamma)
+        w2 = jnp.sum(a_eff * (kxx @ a_eff), axis=0)      # ||w||_H^2, global
+        parts, err_abs = [], jnp.zeros((c,), jnp.float32)
+        for j, ix in enumerate(splits):
+            xj = model.x_support[jnp.asarray(ix)]
+            aj = a_eff[jnp.asarray(ix)]
+            order = landmark_schedule(len(ix), seed=seed + 7919 * j)
+            z, beta, wh2 = _nystrom_project(
+                model.spec, model.gamma, xj, aj,
+                order[:min(landmarks_per_shard, len(ix))], rel_thresh)
+            kjj = kxx[jnp.asarray(ix)][:, jnp.asarray(ix)]
+            wj2 = jnp.sum(aj * (kjj @ aj), axis=0)       # ||w_j||_H^2
+            err_abs = err_abs + jnp.sqrt(jnp.clip(wj2 - wh2, 0.0))
+            parts.append((np.asarray(z), np.asarray(beta)))
+        # The row-mean term was folded into a_eff, so it (and the per-query
+        # row-sum it needs) vanishes from the compressed model.
+        row_mean_coef = jnp.zeros_like(model.row_mean_coef)
+        bias = model.bias
+        rel_err = err_abs / jnp.sqrt(jnp.maximum(w2, 1e-30))
+
+    sizes = tuple(int(x.shape[0]) for x, _ in parts)
+    lp, m = max(sizes), model.n_features
+    xs = np.zeros((n_shards, lp, m), np.float32)
+    ae = np.zeros((n_shards, lp, c + 1), np.float32)
+    for j, (xj, aj) in enumerate(parts):
+        xs[j, :sizes[j]] = xj
+        ae[j, :sizes[j], :c] = aj
+        ae[j, :sizes[j], c] = 1.0                        # indicator column
+    return ShardedFittedKpca(
+        x_support=jnp.asarray(xs), coefs_ext=jnp.asarray(ae),
+        row_mean_coef=jnp.asarray(row_mean_coef, jnp.float32),
+        bias=jnp.asarray(bias, jnp.float32), gamma=model.gamma,
+        n_support=int(sum(sizes)), shard_sizes=sizes,
+        spec=model.spec), rel_err
+
+
+def gather_fitted(sharded: ShardedFittedKpca) -> FittedKpca:
+    """Reassemble a single-device ``FittedKpca`` from a sharded model.
+
+    Drops per-shard padding rows and concatenates the true support slices
+    and coefficient rows; the gathered model's ``project`` output is
+    bit-identical in exact arithmetic to the psum-reduced sharded scores
+    (tested to fp32 tolerance in tests/test_sharded_serving.py).
+    """
+    xs = jnp.concatenate(
+        [sharded.x_support[j, :n]
+         for j, n in enumerate(sharded.shard_sizes)], axis=0)
+    coefs = jnp.concatenate(
+        [sharded.coefs_ext[j, :n, :-1]
+         for j, n in enumerate(sharded.shard_sizes)], axis=0)
+    return FittedKpca(x_support=xs, coefs=coefs,
+                      row_mean_coef=sharded.row_mean_coef, bias=sharded.bias,
+                      gamma=sharded.gamma, spec=sharded.spec)
+
+
 # ---- persistence (repro.checkpoint layout) --------------------------------
 
 def save_fitted(ckpt_dir: str, model: FittedKpca) -> str:
-    """Write the artifact with the atomic checkpoint writer (step 0)."""
+    """Write the artifact with the atomic checkpoint writer (step 0).
+
+    Layout: one ``step_00000000`` directory under ``ckpt_dir`` with a
+    manifest (shapes/dtypes + ``kind``/``spec`` metadata) and one .npy per
+    field — see ``repro.checkpoint``. Returns the checkpoint path.
+    """
     from ..checkpoint import save_checkpoint
     tree = {"x_support": model.x_support, "coefs": model.coefs,
             "row_mean_coef": model.row_mean_coef, "bias": model.bias,
@@ -236,6 +503,7 @@ def save_fitted(ckpt_dir: str, model: FittedKpca) -> str:
 
 
 def load_fitted(ckpt_dir: str) -> FittedKpca:
+    """Restore a ``save_fitted`` checkpoint; validates the artifact kind."""
     from ..checkpoint import restore_checkpoint
     tree, meta, _ = restore_checkpoint(ckpt_dir)
     if meta.get("kind") != "fitted_kpca":
@@ -246,8 +514,42 @@ def load_fitted(ckpt_dir: str) -> FittedKpca:
                       bias=tree["bias"], gamma=tree["gamma"], spec=spec)
 
 
+def save_sharded(ckpt_dir: str, model: ShardedFittedKpca) -> str:
+    """Write a sharded artifact (same atomic layout as ``save_fitted``;
+    static partition metadata rides in the manifest). Returns the path."""
+    from ..checkpoint import save_checkpoint
+    tree = {"x_support": model.x_support, "coefs_ext": model.coefs_ext,
+            "row_mean_coef": model.row_mean_coef, "bias": model.bias,
+            "gamma": model.gamma}
+    meta = {"kind": "sharded_fitted_kpca",
+            "spec": dataclasses.asdict(model.spec),
+            "n_support": model.n_support,
+            "shard_sizes": list(model.shard_sizes)}
+    return save_checkpoint(ckpt_dir, 0, tree, metadata=meta, keep_last=1)
+
+
+def load_sharded(ckpt_dir: str) -> ShardedFittedKpca:
+    """Restore a ``save_sharded`` checkpoint; validates the artifact kind.
+
+    The restored model is mesh-independent (full logical arrays); re-placing
+    it on a device mesh is the serving path's job (``repro.serve.sharded``).
+    """
+    from ..checkpoint import restore_checkpoint
+    tree, meta, _ = restore_checkpoint(ckpt_dir)
+    if meta.get("kind") != "sharded_fitted_kpca":
+        raise ValueError(
+            f"{ckpt_dir} is not a ShardedFittedKpca checkpoint: {meta}")
+    return ShardedFittedKpca(
+        x_support=tree["x_support"], coefs_ext=tree["coefs_ext"],
+        row_mean_coef=tree["row_mean_coef"], bias=tree["bias"],
+        gamma=tree["gamma"], n_support=int(meta["n_support"]),
+        shard_sizes=tuple(int(s) for s in meta["shard_sizes"]),
+        spec=KernelSpec(**meta["spec"]))
+
+
 __all__ = [
-    "FittedKpca", "compress", "effective_coefs", "fit_central", "from_dual",
-    "from_decentralized", "landmark_schedule", "load_fitted", "project",
-    "save_fitted",
+    "FittedKpca", "ShardedFittedKpca", "compress", "effective_coefs",
+    "finalize_partial_scores", "fit_central", "from_dual",
+    "from_decentralized", "gather_fitted", "landmark_schedule", "load_fitted",
+    "load_sharded", "project", "save_fitted", "save_sharded", "shard_fitted",
 ]

@@ -5,10 +5,12 @@
 from .gram import gram_op, gram_reference
 from .centering import center_op, center_reference
 from .admm_step import admm_local_update_op, admm_local_update_reference
-from .project import project_op, project_reference
+from .project import (project_op, project_partial_op,
+                      project_partial_reference, project_reference)
 
 __all__ = [
     "gram_op", "gram_reference", "center_op", "center_reference",
     "admm_local_update_op", "admm_local_update_reference",
-    "project_op", "project_reference",
+    "project_op", "project_partial_op", "project_partial_reference",
+    "project_reference",
 ]

@@ -1,4 +1,28 @@
-from .ops import project_op
-from .ref import project_reference
+"""Fused out-of-sample kPCA projection kernel (the serving hot path).
 
-__all__ = ["project_op", "project_reference"]
+One Pallas kernel (``project.project_tiles``) computes
+``K(X_query, X_support) @ A`` without ever materializing the (B, L) kernel
+block in HBM, exposed through two wrappers:
+
+  * ``project_op(spec, xq, xs, coefs, row_mean_coef, bias)`` -> (B, C)
+    centered scores, the single-device path. The centering term
+    ``mean_l K(x', x_l) * row_mean_coef`` needs the kernel row-means; these
+    are obtained with the *ones-column trick*: A is extended with one extra
+    all-ones column (zeroed on padded support rows), so the row-sums of K
+    accumulate as just another output column of the same matmul, and an
+    in-kernel epilogue folds them into the scores on the last grid step.
+  * ``project_partial_op(spec, xq, xs, coefs_ext)`` -> (B, C+1) raw
+    per-shard partials for multi-device sharded serving: the same matmul
+    with a caller-supplied indicator column and NO epilogue. Shards
+    ``psum`` partials and apply the global centering exactly once after
+    the reduction (see ``repro.serve.sharded``).
+
+``ref.py`` holds the dense pure-jnp oracles both wrappers are tested
+against (tests/test_oos_projection.py, tests/test_sharded_serving.py).
+"""
+
+from .ops import project_op, project_partial_op
+from .ref import project_partial_reference, project_reference
+
+__all__ = ["project_op", "project_partial_op", "project_partial_reference",
+           "project_reference"]

@@ -16,6 +16,8 @@ def project_reference(spec: KernelSpec, x_query: jax.Array,
                       row_mean_coef: Optional[jax.Array] = None,
                       bias: Optional[jax.Array] = None,
                       gamma: Optional[jax.Array] = None) -> jax.Array:
+    """Dense oracle for ``project_op``: (B, M) x (L, M) x (L, C) -> (B, C)
+    scores = K @ coefs + rowmean(K) * row_mean_coef + bias."""
     k = gram(spec, x_query, x_support, gamma=gamma)
     out = k @ coefs
     if row_mean_coef is not None:
@@ -23,3 +25,14 @@ def project_reference(spec: KernelSpec, x_query: jax.Array,
     if bias is not None:
         out = out + bias[None, :]
     return out
+
+
+def project_partial_reference(spec: KernelSpec, x_query: jax.Array,
+                              x_support: jax.Array, coefs_ext: jax.Array,
+                              gamma: Optional[jax.Array] = None) -> jax.Array:
+    """Dense oracle for ``project_partial_op``: raw (B, C+1) partials
+    K(x_query, x_support) @ coefs_ext with no centering epilogue. The last
+    column of ``coefs_ext`` is the valid-row indicator, so the last output
+    column is the raw kernel row-sum over valid support rows."""
+    k = gram(spec, x_query, x_support, gamma=gamma)
+    return k @ coefs_ext

@@ -31,3 +31,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / examples / elastic restore)."""
     return jax.make_mesh(tuple(shape), tuple(axes), **_axis_kw(len(axes)))
+
+
+def make_serving_mesh(n_shards: int, axis_name: str = "shard"):
+    """1-D mesh over the first ``n_shards`` devices for sharded kPCA serving.
+
+    Unlike ``make_mesh`` this tolerates a machine with MORE devices than
+    shards (it takes a prefix) and signals "not enough devices" by returning
+    None instead of raising, so callers (``repro.serve.sharded``) can fall
+    back to the single-device reduction with identical math. On CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the first
+    jax call to expose N host devices.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        return None
+    return Mesh(np.asarray(devices[:n_shards]), (axis_name,))

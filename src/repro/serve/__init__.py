@@ -1,6 +1,7 @@
 from .engine import DecodeEngine, ServeConfig
 from .kpca_engine import (EngineStats, KpcaEngine, KpcaServeConfig,
                           RequestStats)
+from .sharded import project_sharded
 
 __all__ = ["DecodeEngine", "EngineStats", "KpcaEngine", "KpcaServeConfig",
-           "RequestStats", "ServeConfig"]
+           "RequestStats", "ServeConfig", "project_sharded"]

@@ -25,14 +25,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import oos
-from ..core.oos import FittedKpca
+from ..core.oos import FittedKpca, ShardedFittedKpca
 
 
 @dataclasses.dataclass
@@ -78,14 +78,33 @@ class EngineStats:
         return self.n_queries / self.total_time_s if self.total_time_s else 0.0
 
     def latency_percentiles(self, qs=(50, 99)) -> Tuple[float, ...]:
+        """Per-request latency percentiles in seconds, one per entry of
+        ``qs`` (default p50/p99); (0.0, ...) before any request is served."""
         lat = [r.latency_s for r in self.per_request] or [0.0]
         return tuple(float(np.percentile(lat, q)) for q in qs)
 
 
 class KpcaEngine:
-    """Micro-batching projection server over a ``FittedKpca`` artifact."""
+    """Micro-batching projection server over a fitted kPCA artifact.
 
-    def __init__(self, model: FittedKpca, cfg: KpcaServeConfig = None):
+    Accepts either a single-device ``FittedKpca`` (scored via
+    ``repro.core.oos.project``) or a multi-device ``ShardedFittedKpca``
+    (scored via ``repro.serve.sharded.project_sharded``: per-shard partials
+    under shard_map, psum, global centering applied once post-reduction).
+    The batching/bucketing layer is identical for both — slabs are
+    replicated to every shard, so the engine's traffic shaping composes
+    with device sharding unchanged.
+    """
+
+    def __init__(self, model: Union[FittedKpca, ShardedFittedKpca],
+                 cfg: KpcaServeConfig = None, mesh=None):
+        """Args:
+          model: servable artifact (plain or sharded).
+          cfg: batching/bucketing/backend knobs (``KpcaServeConfig``).
+          mesh: for sharded models only — 1-D device mesh with
+            ``model.n_shards`` devices; None builds one over local devices
+            (or falls back to a same-math single-device reduction).
+        """
         self.model = model
         self.cfg = cfg or KpcaServeConfig()
         self._buckets = self.cfg.buckets()
@@ -94,16 +113,41 @@ class KpcaEngine:
         self._next_id = 0
         self.stats = EngineStats()
 
-        def _proj(m, xq):
-            return oos.project(m, xq, use_pallas=self.cfg.use_pallas,
-                               interpret=self.cfg.interpret)
+        if isinstance(model, ShardedFittedKpca):
+            from .sharded import project_sharded
+            from ..launch.mesh import make_serving_mesh
+            if mesh is None:
+                mesh = make_serving_mesh(model.n_shards)
+
+            def _proj(m, xq):
+                return project_sharded(m, xq, mesh=mesh,
+                                       use_pallas=self.cfg.use_pallas,
+                                       interpret=self.cfg.interpret)
+        else:
+            if mesh is not None:
+                raise ValueError("mesh is only meaningful for a "
+                                 "ShardedFittedKpca model")
+
+            def _proj(m, xq):
+                return oos.project(m, xq, use_pallas=self.cfg.use_pallas,
+                                   interpret=self.cfg.interpret)
 
         self._proj = jax.jit(_proj)
 
     # ---- request API -----------------------------------------------------
 
     def submit(self, x_query) -> int:
-        """Enqueue one request of shape (Q, M); returns its request id."""
+        """Enqueue one request.
+
+        Args:
+          x_query: (Q, M) array-like, M = model.n_features; cast to fp32
+            host-side (the engine re-casts per ``cfg.query_dtype`` at slab
+            build time).
+
+        Returns:
+          Integer request id, the key of this request's (Q, C) scores in
+          the dict returned by the next ``flush``.
+        """
         x = np.asarray(x_query, np.float32)
         if x.ndim != 2 or x.shape[1] != self.model.n_features:
             raise ValueError(
@@ -172,8 +216,8 @@ class KpcaEngine:
                 for rid, parts in results.items()}
 
     def project_many(self, requests: Sequence[Any]) -> List[np.ndarray]:
-        """Convenience: submit + flush a list of (Q_i, M) arrays, results
-        returned in order."""
+        """Convenience: submit + flush a list of (Q_i, M) arrays; returns
+        the per-request (Q_i, C) score arrays in submission order."""
         rids = [self.submit(x) for x in requests]
         out = self.flush()
         return [out[rid] for rid in rids]

@@ -1,0 +1,118 @@
+"""Multi-device sharded kPCA projection serving (shard_map + psum).
+
+The out-of-sample score is a sum over support points (paper §1), so it
+shards embarrassingly: each device holds one slice of a
+``ShardedFittedKpca`` — a contiguous block of support rows and the matching
+dual-coefficient rows — and computes the raw partial
+
+    P_j = K(X_query, X_j) @ coefs_ext_j          # (B, C+1)
+
+with the existing fused Pallas projection kernel
+(``repro.kernels.project.project_partial_op``; the extra column is the raw
+kernel row-sum via the indicator column). Partials are ``psum``-reduced over
+the shard mesh axis, and the GLOBAL centering terms (row-mean weight, bias),
+which depend on the full support set, are applied exactly once after the
+reduction (``repro.core.oos.finalize_partial_scores``). Per-query traffic is
+therefore one (B, C+1) all-reduce regardless of support-set size — the same
+communication shape COKE/Balcan-style distributed kPCA exploits.
+
+Execution:
+  * with a mesh (``launch.mesh.make_serving_mesh`` or caller-supplied), the
+    partial computation runs under ``shard_map`` with the model's shard axis
+    partitioned over the mesh and queries replicated;
+  * with no mesh (fewer devices than shards), a vmap-over-shards fallback
+    computes the identical math on one device, so tests and laptops run the
+    same code path modulo placement.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.kernels_math import gram
+from ..core.oos import ShardedFittedKpca, finalize_partial_scores
+from ..distributed.compat import shard_map
+from ..launch.mesh import make_serving_mesh
+
+
+def _shard_partial(spec, xq, xs, coefs_ext, gamma, use_pallas, interpret):
+    """One shard's raw (B, C+1) partial: K(xq, xs) @ coefs_ext."""
+    if use_pallas:
+        from ..kernels.project import project_partial_op
+        return project_partial_op(spec, xq, xs, coefs_ext, gamma=gamma,
+                                  interpret=interpret)
+    return gram(spec, xq, xs, gamma=gamma) @ coefs_ext
+
+
+def project_sharded(model: ShardedFittedKpca, x_query: jax.Array, *,
+                    mesh=None, axis_name: str = "shard",
+                    use_pallas: bool = False,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Sharded centered out-of-sample scores: (B, M) -> (B, C).
+
+    Args:
+      model: sharded artifact (see ``repro.core.oos.shard_fitted``).
+      x_query: (B, M) query batch, replicated to every shard.
+      mesh: 1-D ``jax.sharding.Mesh`` whose single axis has size
+        ``model.n_shards``. None = build one over the first n_shards local
+        devices, falling back to the single-device reduction when the
+        machine has fewer devices than shards.
+      axis_name: mesh axis to reduce over (when building the default mesh).
+      use_pallas: per-shard partials via the fused Pallas kernel instead of
+        the dense jnp path.
+      interpret: forwarded to the Pallas wrapper.
+
+    Returns:
+      (B, C) float32 scores, equal to ``oos.project(gather_fitted(model))``
+      to fp32 tolerance (tests/test_sharded_serving.py).
+    """
+    x_query = jnp.asarray(x_query)
+    if mesh is None:
+        mesh = make_serving_mesh(model.n_shards, axis_name)
+    if mesh is None:                      # not enough devices: same math,
+        partials = _partials_local(model, x_query, use_pallas, interpret)
+    else:                                 # one device per shard + psum
+        partials = _partials_shard_map(model, x_query, mesh, use_pallas,
+                                       interpret)
+    return finalize_partial_scores(partials, model.row_mean_coef,
+                                   model.bias, model.n_support)
+
+
+def _partials_shard_map(model: ShardedFittedKpca, x_query: jax.Array, mesh,
+                        use_pallas: bool,
+                        interpret: Optional[bool]) -> jax.Array:
+    """psum-reduced (B, C+1) partials over the mesh's shard axis."""
+    (axis_name,) = mesh.axis_names
+    spec = model.spec
+
+    def fn(xs, ae, xq, g):
+        # xs (1, Lp, M), ae (1, Lp, C+1): this device's shard slice.
+        part = _shard_partial(spec, xq, xs[0], ae[0], g, use_pallas,
+                              interpret)
+        return jax.lax.psum(part, axis_name)
+
+    f = shard_map(fn, mesh=mesh,
+                  in_specs=(P(axis_name), P(axis_name), P(None, None), P()),
+                  out_specs=P(None, None), check_vma=False)
+    return f(model.x_support, model.coefs_ext, x_query, model.gamma)
+
+
+def _partials_local(model: ShardedFittedKpca, x_query: jax.Array,
+                    use_pallas: bool,
+                    interpret: Optional[bool]) -> jax.Array:
+    """Single-device reduction: loop shards, sum partials (== psum)."""
+    spec = model.spec
+    total = jnp.zeros((x_query.shape[0], model.n_components + 1),
+                      jnp.float32)
+    for j in range(model.n_shards):
+        total = total + _shard_partial(
+            spec, x_query, model.x_support[j], model.coefs_ext[j],
+            model.gamma, use_pallas, interpret)
+    return total
+
+
+__all__ = ["project_sharded"]

@@ -1,0 +1,16 @@
+"""Expose multiple host CPU devices for the in-process sharded-serving
+tests (tests/test_sharded_serving.py builds 1/2/4-device meshes).
+
+Must run before jax initializes its backends; conftest import precedes every
+test module, and nothing imports jax at collection time before this. The
+subprocess-based distributed tests (tests/helpers/*, test_substrate
+elastic-reshard) set their own XLA_FLAGS and are unaffected.
+"""
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count=4"
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()

@@ -1,0 +1,196 @@
+"""Tests for sharded multi-device kPCA serving: ShardedFittedKpca
+(repro.core.oos), the shard_map + psum execution path (repro.serve.sharded),
+per-shard landmark compression, and the engine routing.
+
+tests/conftest.py exposes 4 host CPU devices, so shard counts 1/2/4 all run
+on a REAL mesh (shard_map + psum), not just the single-device fallback.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KernelSpec, oos
+from repro.core.kernels_math import gram
+from repro.launch.mesh import make_serving_mesh
+from repro.serve import KpcaEngine, KpcaServeConfig
+from repro.serve.sharded import project_sharded
+
+SPEC = KernelSpec(kind="rbf", gamma=0.25)
+N, M, C = 90, 12, 3                       # N chosen indivisible by 4
+
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x = jnp.asarray(_rand((N, M), seed=0))
+    return oos.fit_central(x, SPEC, n_components=C, center=True)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return jnp.asarray(_rand((17, M), seed=1))
+
+
+class TestShardingParity:
+    @pytest.mark.parametrize("n_shards", [1, 2, 4])
+    def test_matches_unsharded_on_mesh(self, fitted, queries, n_shards):
+        """Sharded psum scores == FittedKpca.transform to fp32 tolerance,
+        on a real CPU device mesh."""
+        assert jax.device_count() >= 4, "conftest should expose 4 devices"
+        sharded, err = oos.shard_fitted(fitted, n_shards)
+        assert np.all(np.asarray(err) == 0.0)     # sharding alone is exact
+        mesh = make_serving_mesh(n_shards)
+        assert mesh is not None and mesh.devices.size == n_shards
+        got = np.asarray(project_sharded(sharded, queries, mesh=mesh))
+        want = np.asarray(oos.project(fitted, queries))
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    @pytest.mark.parametrize("n_shards", [2, 4])
+    def test_pallas_partials_match(self, fitted, queries, n_shards):
+        sharded, _ = oos.shard_fitted(fitted, n_shards)
+        got = np.asarray(project_sharded(sharded, queries, use_pallas=True,
+                                         interpret=True))
+        want = np.asarray(oos.project(fitted, queries))
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_uneven_partition(self, fitted, queries):
+        """N=90 over 4 shards: sizes (23, 23, 22, 22), padding rows must
+        contribute nothing."""
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        assert sum(sharded.shard_sizes) == N
+        assert sharded.shard_capacity == max(sharded.shard_sizes)
+        assert len(set(sharded.shard_sizes)) > 1   # actually uneven
+        # indicator column is 0 exactly on padding rows
+        ind = np.asarray(sharded.coefs_ext[..., -1])
+        for j, n in enumerate(sharded.shard_sizes):
+            assert ind[j, :n].all() and not ind[j, n:].any()
+        got = np.asarray(project_sharded(sharded, queries))
+        want = np.asarray(oos.project(fitted, queries))
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_single_device_fallback_same_math(self, fitted, queries):
+        """mesh=None with more shards than devices falls back to the local
+        reduction; scores identical to the mesh path."""
+        sharded, _ = oos.shard_fitted(fitted, 8)   # > 4 devices
+        assert make_serving_mesh(8) is None
+        got = np.asarray(project_sharded(sharded, queries))
+        want = np.asarray(oos.project(fitted, queries))
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+class TestGatherAndCheckpoint:
+    def test_shard_gather_roundtrip(self, fitted, queries):
+        sharded, _ = oos.shard_fitted(fitted, 3)
+        back = oos.gather_fitted(sharded)
+        np.testing.assert_array_equal(np.asarray(back.x_support),
+                                      np.asarray(fitted.x_support))
+        np.testing.assert_array_equal(np.asarray(back.coefs),
+                                      np.asarray(fitted.coefs))
+        np.testing.assert_array_equal(np.asarray(oos.project(back, queries)),
+                                      np.asarray(oos.project(fitted, queries)))
+
+    def test_checkpoint_roundtrip(self, fitted, queries, tmp_path):
+        """save -> load -> gather recovers the exact serving behavior."""
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        oos.save_sharded(str(tmp_path / "ck"), sharded)
+        back = oos.load_sharded(str(tmp_path / "ck"))
+        assert back.spec == sharded.spec
+        assert back.shard_sizes == sharded.shard_sizes
+        assert back.n_support == sharded.n_support
+        np.testing.assert_array_equal(np.asarray(back.coefs_ext),
+                                      np.asarray(sharded.coefs_ext))
+        np.testing.assert_array_equal(
+            np.asarray(project_sharded(back, queries)),
+            np.asarray(project_sharded(sharded, queries)))
+        gathered = oos.gather_fitted(back)
+        np.testing.assert_allclose(
+            np.asarray(oos.project(gathered, queries)),
+            np.asarray(oos.project(fitted, queries)), rtol=1e-6, atol=1e-6)
+
+    def test_load_rejects_wrong_kind(self, fitted, tmp_path):
+        oos.save_fitted(str(tmp_path / "ck"), fitted)
+        with pytest.raises(ValueError):
+            oos.load_sharded(str(tmp_path / "ck"))
+
+
+class TestPerShardCompression:
+    def test_bound_dominates_actual_error(self, fitted):
+        """The aggregate triangle-inequality bound must upper-bound the true
+        relative RKHS error of the summed compressed component."""
+        sharded, bound = oos.shard_fitted(fitted, 2, landmarks_per_shard=16)
+        a_eff = np.asarray(oos.effective_coefs(fitted))
+        x, g = fitted.x_support, fitted.gamma
+        cm = oos.gather_fitted(sharded)               # row_mean_coef == 0
+        z, beta = cm.x_support, np.asarray(cm.coefs)
+        kxx = np.asarray(gram(SPEC, x, gamma=g))
+        kzz = np.asarray(gram(SPEC, z, gamma=g))
+        kxz = np.asarray(gram(SPEC, x, z, gamma=g))
+        w2 = np.sum(a_eff * (kxx @ a_eff), axis=0)
+        wh2 = np.sum(beta * (kzz @ beta), axis=0)
+        cross = np.sum(a_eff * (kxz @ beta), axis=0)
+        actual = np.sqrt(np.clip(w2 + wh2 - 2 * cross, 0.0, None) / w2)
+        assert (np.asarray(bound) >= actual - 1e-5).all(), (bound, actual)
+
+    def test_bound_monotone_in_landmarks(self, fitted):
+        """Per-shard nested landmark schedules => the aggregate bound is
+        monotone non-increasing in the per-shard budget."""
+        bounds = []
+        for n_l in (8, 16, 32, 45):
+            _, b = oos.shard_fitted(fitted, 2, landmarks_per_shard=n_l,
+                                    seed=0)
+            bounds.append(np.asarray(b))
+        for lo, hi in zip(bounds[1:], bounds[:-1]):
+            assert (lo <= hi + 1e-5).all(), (lo, hi)
+
+    def test_full_budget_recovers_exact_scores(self, fitted, queries):
+        """landmarks_per_shard >= every shard size => projection is onto the
+        full span, so scores match the uncompressed model."""
+        sharded, bound = oos.shard_fitted(fitted, 3, landmarks_per_shard=N)
+        assert float(np.max(np.asarray(bound))) < 1e-2
+        got = np.asarray(project_sharded(sharded, queries))
+        want = np.asarray(oos.project(fitted, queries))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_compressed_serving_cost_shrinks(self, fitted):
+        sharded, _ = oos.shard_fitted(fitted, 4, landmarks_per_shard=8)
+        assert sharded.shard_capacity == 8
+        assert sharded.n_support == 32
+        assert np.all(np.asarray(sharded.row_mean_coef) == 0.0)
+
+
+class TestEngineRouting:
+    def test_engine_serves_sharded_model(self, fitted):
+        """KpcaEngine results over a sharded model match the unsharded
+        engine request-for-request."""
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        reqs = [_rand((q, M), seed=10 + q) for q in (3, 11, 26)]
+        ref_eng = KpcaEngine(fitted, KpcaServeConfig(max_batch=16,
+                                                     min_bucket=8))
+        sh_eng = KpcaEngine(sharded, KpcaServeConfig(max_batch=16,
+                                                     min_bucket=8))
+        want = ref_eng.project_many(reqs)
+        got = sh_eng.project_many(reqs)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=3e-4, atol=3e-4)
+        assert sh_eng.stats.n_requests == 3
+        assert sh_eng.stats.n_queries == 3 + 11 + 26
+
+    def test_engine_rejects_mesh_for_plain_model(self, fitted):
+        mesh = make_serving_mesh(1)
+        with pytest.raises(ValueError):
+            KpcaEngine(fitted, mesh=mesh)
+
+
+class TestValidation:
+    def test_rejects_bad_shard_count(self, fitted):
+        with pytest.raises(ValueError):
+            oos.shard_fitted(fitted, 0)
+        with pytest.raises(ValueError):
+            oos.shard_fitted(fitted, N + 1)
+        with pytest.raises(ValueError):
+            oos.shard_fitted(fitted, 2, landmarks_per_shard=0)
