@@ -49,6 +49,10 @@ def _parse_args():
     ap.add_argument("--json", default=None,
                     help="write rows as JSON to this path "
                          "(default bench-smoke.json under --smoke)")
+    ap.add_argument("--out", default=None,
+                    help="ALSO write the same JSON payload to this path — "
+                         "used by CI to persist the repo-root BENCH_<n>.json"
+                         " artifact tracking the perf trajectory across PRs")
     ap.add_argument("--host-devices", type=int, default=4,
                     help="host CPU devices to expose for the shard suite "
                          "(0 = leave XLA_FLAGS untouched)")
@@ -111,10 +115,12 @@ def main() -> None:
         sys.stdout.flush()
 
     json_path = args.json or ("bench-smoke.json" if args.smoke else None)
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump({"suites": names, "rows": results}, f, indent=2)
-        print(f"wrote {json_path}", file=sys.stderr)
+    payload = {"suites": names, "rows": results}
+    for path in filter(None, {json_path, args.out}):
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -11,7 +11,6 @@ Restart-resume: re-running with the same --ckpt-dir continues where the
 previous run stopped (kill it mid-run and re-launch to see)."""
 
 import argparse
-import dataclasses
 import logging
 
 from repro.configs.base import ArchConfig

@@ -11,15 +11,16 @@ from .local import local_kpca, neighborhood_kpca
 from .metrics import similarity, subspace_alignment
 from .oos import FittedKpca, ShardedFittedKpca
 from .rho import RhoSchedule, assumption2_rho, auto_rho
-from . import oos, topology
+from .solver import AdmmState, ChunkResult, run_chunked
+from . import oos, solver, topology
 
 __all__ = [
-    "DkpcaResult", "DkpcaSetup", "FittedKpca", "KernelSpec", "RhoSchedule",
-    "ShardedFittedKpca",
+    "AdmmState", "ChunkResult", "DkpcaResult", "DkpcaSetup", "FittedKpca",
+    "KernelSpec", "RhoSchedule", "ShardedFittedKpca",
     "admm_iteration", "assumption2_rho", "augmented_lagrangian", "auto_rho",
     "build_setup", "center_gram", "center_gram_global", "central_kpca",
     "gram", "kpca_project", "local_kpca", "metrics", "neighborhood_kpca",
     "oos", "pairwise_sqdist", "psd_jitter_eigh", "resolve_gamma", "run_admm",
-    "similarity", "subspace_alignment", "theorem2_rho", "topk_eigh",
-    "topology",
+    "run_chunked", "similarity", "solver", "subspace_alignment",
+    "theorem2_rho", "topk_eigh", "topology",
 ]

@@ -22,6 +22,13 @@ One ADMM iteration (uniform-rho form for reference):
         z_m = z_hat_m / max(1, ||z_hat_m||)                        (eq. 10-11)
   alpha: alpha_j = [rho_bar K_j - 2 K_j^2]^-1 (rho G_j - B_j) 1    (eq. 12)
   eta:  B_j[:,s] += rho_s (K_j alpha_j - G_j[:,s])                 (eq. 13)
+
+The iteration BODY lives in ``repro.core.solver.admm_step`` (one shared
+implementation for this module and the SPMD ``repro.core.dkpca``); this
+module supplies the dense transport (all nodes in-process, slot routing by
+(src, rsl) indexing), the setup phase, and the whole-history run loop.
+``repro.core.solver.run_chunked`` is the resumable chunked driver over the
+same step.
 """
 
 from __future__ import annotations
@@ -36,6 +43,7 @@ import numpy as np
 
 from .kernels_math import KernelSpec, center_gram, gram, psd_jitter_eigh, resolve_gamma
 from .rho import RhoSchedule, auto_rho
+from .solver import admm_step, dense_parts, init_state, lagrangian
 from .topology import Graph
 
 
@@ -208,129 +216,52 @@ def _slot_rho(setup: DkpcaSetup, rho1, rho2):
     return r * setup.mask
 
 
-def _solve_kinv(setup: DkpcaSetup, b, rel_thresh=1e-5):
-    """K_j^{-1} b (pseudo-inverse on the row space of K_j). b: (J, N, ...)."""
-    lam, v = setup.lam, setup.vec
-    inv = jnp.where(lam > rel_thresh * lam[:, -1:], 1.0 / lam, 0.0)
-    tmp = jnp.einsum("jnm,jm...->jn...", jnp.swapaxes(v, 1, 2), b)
-    tmp = tmp * (inv[..., None] if tmp.ndim == 3 else inv)
-    return jnp.einsum("jnm,jm...->jn...", v, tmp)
-
-
 def admm_iteration(setup: DkpcaSetup, alpha, b, rho1, rho2,
                    project: str = "ball"):
-    """One ADMM iteration (eq. 10-13, per-slot-rho generalization).
+    """One ADMM iteration (eq. 10-13, per-slot-rho generalization) through
+    the shared step body (``repro.core.solver.admm_step``) over the dense
+    transport.
 
     alpha: (J, N); b: (J, N, S). Returns (alpha', b', g, znorm2).
     """
-    mask = setup.mask
+    ops, comm = dense_parts(setup)
     rho_slots = _slot_rho(setup, rho1, rho2)              # (J, S)
-    rho_bar = jnp.sum(rho_slots, axis=1)                  # (J,) sum of in-slot
-    # rho-weights: by graph symmetry the in-slot weights of node m equal its
-    # own out-slot weights (self rho1, neighbors rho2).
-
-    # ---- Z-update -------------------------------------------------------
-    # message 1 (sent by src l): m1_l = K_l^{-1} B_l     (per out-slot column)
-    m1 = _solve_kinv(setup, b)                            # (J, N, S)
-    # gather onto in-slots of each node m: contribution of slot i (owner
-    # src[m,i], its out-slot rsl[m,i]):
-    #   c[m, i] = (m1_src[:, rsl] + rho_i * alpha_src) / rho_bar_m
-    m1_g = m1[setup.src, :, setup.rsl]                    # (J, S, N)
-    al_g = alpha[setup.src]                               # (J, S, N)
-    c = (m1_g + rho_slots[..., None] * al_g) / rho_bar[:, None, None]
-    c = c * mask[..., None]
-    # ||z_hat_m||^2 = sum_ab c_a^T K(X_a, X_b) c_b  over in-slots
-    znorm2 = jnp.einsum("jan,jabnm,jbm->j", c, setup.kcross, c)
-    rs = jax.lax.rsqrt(jnp.maximum(znorm2, 1e-30))
-    if project == "sphere":
-        # Always renormalize z. Experimental: breaks the dual-variable
-        # consistency of the ball-constrained problem (B integrates a
-        # persistent residual); kept for ablation only.
-        scale = rs
-    else:
-        # Paper eq. (11): project onto the unit *ball* ("ball"/"rescale").
-        # NOTE (§Repro insight): z=0 is then also a stationary point of the
-        # iteration; it only sustains while ||z_hat|| >= 1, which the paper's
-        # *unnormalized* Gaussian alpha-init gives at t=0 (||alpha0||~sqrt(N))
-        # and the "rescale" gauge (see run loop) maintains for t -> inf.
-        scale = jnp.where(znorm2 > 1.0, rs, 1.0)
-    # p[m, a] = phi(X_src[m,a])^T z_m for every in-slot owner a
-    p = scale[:, None, None] * jnp.einsum("jabnm,jbm->jan", setup.kcross, c)
-    # deliver: G_j[:, s] = phi(X_j)^T z_{dest of out-slot s} = p[src, rsl]
-    g = p[setup.src, setup.rsl] * mask[..., None]         # (J, S, N) slot-major
-    g = jnp.swapaxes(g, 1, 2)                             # (J, N, S)
-
-    # ---- alpha-update (eq. 12) -----------------------------------------
-    rhs = jnp.sum(rho_slots[:, None, :] * g - b * mask[:, None, :], axis=2)
-    lam = setup.lam
-    den = rho_bar[:, None] * lam - 2.0 * lam * lam
-    # drop (don't invert) directions where the alpha-Hessian is not PD —
-    # during the rho warm-up large-N kernels can violate Assumption 2 for a
-    # few iterations; clamping would amplify those modes into divergence.
-    inv = jnp.where((lam > 1e-5 * lam[:, -1:]) & (den > 0), 1.0 / den, 0.0)
-    vt_rhs = jnp.einsum("jnm,jm->jn", jnp.swapaxes(setup.vec, 1, 2), rhs)
-    alpha_new = jnp.einsum("jnm,jm->jn", setup.vec, inv * vt_rhs)
-
-    # ---- eta-update (eq. 13) -------------------------------------------
-    ka = jnp.einsum("jnm,jm->jn", setup.k, alpha_new)     # (J, N)
-    b_new = b + rho_slots[:, None, :] * (ka[..., None] - g)
-    b_new = b_new * mask[:, None, :]
-
-    if project == "rescale":
-        # Beyond-paper stabilization (gauge renormalization): while no node's
-        # ||z_hat|| exceeds 1, the whole iteration is 1-homogeneous in
-        # (alpha, B) jointly, so multiplying the state by a global constant
-        # replays the *same* trajectory in a different gauge. Rescale so the
-        # largest ||z_hat|| sits at the ball boundary; this removes the slow
-        # decay into the degenerate z=0 stationary point at long horizons
-        # (power iteration on the linear part of the ADMM map).
-        zmax = jnp.sqrt(jnp.maximum(jnp.max(znorm2), 1e-30))
-        gain = jnp.where(zmax < 1.0, 1.0 / zmax, 1.0)
-        alpha_new = alpha_new * gain
-        b_new = b_new * gain
-    return alpha_new, b_new, g, znorm2
+    state = init_state(alpha, setup.n_slots)
+    state = dataclasses.replace(state, b=jnp.asarray(b))
+    new, _ = admm_step(ops, comm, state, rho_slots, project)
+    return new.alpha, new.b, new.g, new.znorm2
 
 
 def augmented_lagrangian(setup: DkpcaSetup, alpha, b, g, rho1, rho2):
     """Dual-space evaluation of eq. (8):
     L = sum_j [ -a^T K^2 a + sum_s B_s^T C_s + sum_s rho_s/2 C_s^T K C_s ],
     C_s = alpha - K^{-1} G_s (constraint residual coefficients)."""
-    rho_slots = _slot_rho(setup, rho1, rho2)
-    ka = jnp.einsum("jnm,jm->jn", setup.k, alpha)
-    obj = -jnp.sum(ka * ka, axis=1)                       # -||alpha^T K||^2
-    kinv_g = _solve_kinv(setup, g)                        # (J, N, S)
-    cres = (alpha[..., None] - kinv_g) * setup.mask[:, None, :]
-    lin = jnp.sum(b * cres, axis=(1, 2))
-    kc = jnp.einsum("jnm,jms->jns", setup.k, cres)
-    quad = 0.5 * jnp.sum(rho_slots[:, None, :] * cres * kc, axis=(1, 2))
-    return jnp.sum(obj + lin + quad)
+    ops, _ = dense_parts(setup)
+    return lagrangian(ops, alpha, b, g, _slot_rho(setup, rho1, rho2))
 
 
 @partial(jax.jit, static_argnames=("setup_static", "n_iters", "project"))
 def _run_jit(setup_static, setup_arrays, alpha0, rho1_arr, rho2_arr, n_iters,
              project):
     setup = dataclasses.replace(setup_static, **setup_arrays)
+    ops, comm = dense_parts(setup)
 
     def step(carry, t):
-        alpha, b = carry
-        r1, r2 = rho1_arr[t], rho2_arr[t]
-        alpha_n, b_n, g, _ = admm_iteration(setup, alpha, b, r1, r2, project)
+        st = carry
+        rho_slots = _slot_rho(setup, rho1_arr[t], rho2_arr[t])
+        new, res = admm_step(ops, comm, st, rho_slots, project)
         # Theorem-2 pairing: L(alpha^t, Z^t, eta^t) with Z^t generated from
         # (alpha^t, eta^t) — i.e. the *incoming* alpha/b with the g computed
         # from them inside this iteration.
-        lag = augmented_lagrangian(setup, alpha, b, g, r1, r2)
-        ka = jnp.einsum("jnm,jm->jn", setup.k, alpha_n)
-        res = jnp.sqrt(jnp.sum(setup.mask[:, None, :]
-                               * (ka[..., None] - g) ** 2))
-        return (alpha_n, b_n), (alpha_n, lag, res)
+        lag = lagrangian(ops, st.alpha, st.b, new.g, rho_slots)
+        return new, (new.alpha, lag, res)
 
-    b0 = jnp.zeros(alpha0.shape + (setup.n_slots,), alpha0.dtype)
-    (alpha, _), (ahist, lhist, rhist) = jax.lax.scan(
-        step, (alpha0, b0), jnp.arange(n_iters))
-    return alpha, ahist, lhist, rhist
+    final, (ahist, lhist, rhist) = jax.lax.scan(
+        step, init_state(alpha0, setup.n_slots), jnp.arange(n_iters))
+    return final.alpha, ahist, lhist, rhist
 
 
-def initial_alpha(setup: DkpcaSetup, init: str = "paper", seed: int = 0):
+def initial_alpha(setup: DkpcaSetup, init: str = "local", seed: int = 0):
     """alpha^(0).
 
     "paper": entrywise standard normal, *unnormalized* — the scale matters:
@@ -338,15 +269,35 @@ def initial_alpha(setup: DkpcaSetup, init: str = "paper", seed: int = 0):
       (the iteration's only normalization) engages from step one.
     "local": warm start at the local kPCA solution (v1/sqrt(lam1) of K_j),
       i.e. each node starts at its own best guess; ||w_j|| = 1 exactly.
+      This warm-starts the consensus variable z at the pooled local
+      components, which removes the m=24 transient entirely (measured in
+      docs/ADMM_CONVERGENCE.md §Ablations) — hence the default. Requires no
+      extra communication: each node eigendecomposes its own K_j, which the
+      setup phase already does.
     """
     if init == "paper":
         key = jax.random.PRNGKey(seed)
         return jax.random.normal(key, setup.x.shape[:2], setup.k.dtype)
     if init == "local":
-        def top(lam, v):
-            return v[:, -1] / jnp.sqrt(jnp.maximum(lam[-1], 1e-12))
-        return jax.vmap(top)(setup.lam, setup.vec)
+        return jax.vmap(local_solution_alpha)(setup.lam, setup.vec)
     raise ValueError(init)
+
+
+def local_solution_alpha(lam: jax.Array, vec: jax.Array) -> jax.Array:
+    """One node's local kPCA solution v1/sqrt(lam1) (so ||w_j|| = 1).
+    lam: (N,) ascending; vec: (N, N). Shared by the reference
+    ``initial_alpha(init="local")`` and the SPMD in-node default init.
+
+    The eigenvector sign is whatever eigh returns. Do NOT "canonicalize"
+    it per-node (e.g. largest-|entry| positive): a node-local sign rule
+    keys on node-specific sample indices and de-correlates the signs
+    ACROSS nodes, which makes neighbors' warm starts partially cancel in
+    the z-update (measured: m=24 similarity drops from 0.997 back to 0.59
+    @ 30 iters). LAPACK's sign is a deterministic function of the matrix,
+    and nodes drawing data from one distribution get consistently-signed
+    top eigenvectors — the reference and SPMD paths also agree because
+    they eigendecompose the same (up to fp noise) centered K_j."""
+    return vec[:, -1] / jnp.sqrt(jnp.maximum(lam[-1], 1e-12))
 
 
 def run_admm(setup: DkpcaSetup, n_iters: int = 30,
@@ -354,12 +305,18 @@ def run_admm(setup: DkpcaSetup, n_iters: int = 30,
              rho2: Optional[RhoSchedule] = None,
              seed: int = 0,
              alpha0: Optional[jax.Array] = None,
-             init: str = "paper",
+             init: str = "local",
              project: str = "ball") -> DkpcaResult:
-    """Run Alg. 1. rho2 defaults to the paper's warm-up schedule
-    (10 -> 50 -> 100); pass ``RhoSchedule.constant(auto_rho(...))`` for the
-    Theorem-2 regime. ``project="sphere"`` enables the beyond-paper
-    renormalization that removes the degenerate z=0 attractor."""
+    """Run Alg. 1 (whole history in one jitted scan; see
+    ``repro.core.solver.run_chunked`` for the resumable chunked driver).
+
+    rho2 defaults to the paper's warm-up schedule (10 -> 50 -> 100); pass
+    ``RhoSchedule.constant(auto_rho(...))`` for the Theorem-2 regime.
+    ``init`` defaults to the local-solution z warm-start (the measured fix
+    for the slow low-m transient — docs/ADMM_CONVERGENCE.md §Ablations);
+    ``init="paper"`` restores the paper's Gaussian initialization.
+    ``project="sphere"`` enables the beyond-paper renormalization that
+    removes the degenerate z=0 attractor."""
     if rho2 is None:
         rho2 = RhoSchedule()
     if alpha0 is None:

@@ -7,7 +7,6 @@ Solves the eigenproblem of the (centered) global Gram matrix; the solution
 
 from __future__ import annotations
 
-import warnings
 from functools import partial
 from typing import Optional
 
@@ -35,32 +34,25 @@ def central_kpca(x: jax.Array, spec: KernelSpec, n_components: int = 1,
 
 
 def kpca_project(x_new: jax.Array, x_train: jax.Array, alpha: jax.Array,
-                 spec: KernelSpec, gamma: Optional[jax.Array] = None,
-                 center: bool = True):
+                 spec: KernelSpec, gamma: Optional[jax.Array] = None):
     """Project new points onto learned components (paper §1):
     (w*)^T phi_c(x') = sum_i alpha_i [K(x_i, x') - m(x') - m_i + mu_bar].
 
-    ``center=True`` (default) applies the training kernel-mean correction,
-    matching components fit on the *centered* Gram — the raw ``kx @ alpha``
-    this function used to return silently disagrees with a centered fit
-    (the scores were offset by the uncentered mean terms). Pass
-    ``center=False`` only for components fit with ``center=False``; that
-    raw path is deprecated in favor of ``repro.core.oos.FittedKpca``, which
-    carries its own centering statistics.
+    Always applies the training kernel-mean correction, matching components
+    fit on the *centered* Gram. (The historical raw ``kx @ alpha`` path —
+    ``center=False`` — silently disagreed with a centered fit; it went
+    through a DeprecationWarning cycle and is now removed. For an
+    uncentered fit, build the artifact explicitly:
+    ``oos.from_dual(..., center=False)`` + ``oos.project``.)
 
-    NOTE: this is a stateless convenience for one-off projections; with
-    ``center=True`` every call re-derives the kernel-mean statistics from
-    the full (N, N) training Gram. Projecting repeatedly against the same
-    fit? Build the artifact once (``oos.from_dual`` / ``oos.fit_central``)
-    and call ``oos.project`` — that is the serving path.
+    NOTE: this is a stateless convenience for one-off projections; every
+    call re-derives the kernel-mean statistics from the full (N, N)
+    training Gram. Projecting repeatedly against the same fit? Build the
+    artifact once (``oos.from_dual`` / ``oos.fit_central``) and call
+    ``oos.project`` — that is the serving path.
     """
     from . import oos
     squeeze = alpha.ndim == 1
-    model = oos.from_dual(x_train, alpha, spec, gamma=gamma, center=center)
-    if not center:
-        warnings.warn(
-            "kpca_project(center=False) is the deprecated raw path; build a "
-            "repro.core.oos.FittedKpca artifact instead — it records whether "
-            "the fit was centered.", DeprecationWarning, stacklevel=2)
+    model = oos.from_dual(x_train, alpha, spec, gamma=gamma, center=True)
     out = oos.project(model, x_new)
     return out[:, 0] if squeeze else out

@@ -16,13 +16,21 @@ structure):
           (alpha_l, K_l^-1 B_l column)  ->  Z-update (eq. 10-11)
           (phi(X_l)^T z_j projections)  ->  alpha/eta updates (eq. 12-13)
 
+The iteration BODY is the shared ``repro.core.solver.admm_step`` — the same
+code the reference simulator runs, here over the ``RingComm`` (ppermute)
+transport instead of dense indexing.
+
 Per-node per-iteration communication is O(|Omega_j| N) numbers — matching
 the paper's §4.2 cost analysis — and is independent of the network size J.
 
-Fault tolerance: the ring is re-knit around failed nodes by re-launching
-with the survivor mesh (see ``repro.core.topology.reknit`` and
-tests/test_fault_tolerance.py); ADMM state (alpha, B) checkpoints via
-``repro.checkpoint``.
+Resumable runs: ``dkpca_distributed(alpha0=..., b0=..., t0=...)`` continues
+from a mid-run iterate (the returned ``DistDkpcaResult.b`` plus ``alpha``
+is the full restart state; ``t0`` offsets the rho schedule), which is the
+SPMD equivalent of the reference path's ``repro.core.solver.run_chunked``
+chunk boundaries. Fault tolerance: the ring is re-knit around failed nodes
+by re-launching with the survivor mesh (see ``repro.core.topology.reknit``
+and tests/test_fault_tolerance.py); state checkpoints via
+``repro.checkpoint`` (``repro.core.solver.save_state``).
 """
 
 from __future__ import annotations
@@ -34,11 +42,12 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from .admm import initial_alpha  # noqa: F401  (same init semantics)
+from .admm import initial_alpha, local_solution_alpha  # noqa: F401
 from .kernels_math import KernelSpec, gram, psd_jitter_eigh, resolve_gamma
 from .rho import RhoSchedule
+from .solver import AdmmState, RingComm, SolverOps, admm_step
 from ..distributed.compat import pvary, shard_map
 from .topology import ring_shifts
 
@@ -49,6 +58,7 @@ class DistDkpcaResult:
     alpha_hist: jax.Array      # (T, J, N)
     primal_residual: jax.Array  # (T,)
     znorm2_hist: jax.Array     # (T, J)
+    b: Optional[jax.Array] = None  # (J, N, S) final duals (restart state)
 
 
 def _ring_recv(v, axes, offset: int, j: int):
@@ -69,7 +79,10 @@ def dkpca_distributed(
     rho2: Optional[RhoSchedule] = None,
     n_iters: int = 30,
     seed: int = 0,
+    init: str = "local",
     alpha0: Optional[jax.Array] = None,
+    b0: Optional[jax.Array] = None,
+    t0: int = 0,
     project: str = "ball",
     gamma: Optional[float] = None,
     use_pallas: bool = False,
@@ -79,6 +92,16 @@ def dkpca_distributed(
     """Run decentralized kPCA with one network node per device.
 
     x_nodes: (J, N, M) with J == prod(mesh axis sizes for axis_names).
+    init (used when alpha0 is None): "local" (default, same semantics as
+    ``repro.core.admm.initial_alpha``) starts each node at its own local
+    kPCA solution — computed INSIDE the node program from the
+    eigendecomposition the setup phase already does, so it costs no extra
+    communication and warm-starts z at the pooled local components (the
+    measured m=24 transient fix, docs/ADMM_CONVERGENCE.md); "paper" is the
+    paper's unnormalized Gaussian.
+    b0/t0: resume a run from iteration ``t0`` with duals ``b0`` (J, N, S)
+    — pass the previous call's ``result.b``/``result.alpha``; the rho2
+    schedule is evaluated at the global iteration indices [t0, t0+n_iters).
     """
     axis_names = tuple(axis_names)
     j_nodes = int(np.prod([mesh.shape[a] for a in axis_names]))
@@ -92,10 +115,20 @@ def dkpca_distributed(
         g = resolve_gamma(spec, x_nodes.reshape(jj * n, m))
     else:
         g = jnp.asarray(gamma, jnp.float32)
+    local_init = False
     if alpha0 is None:
-        alpha0 = jax.random.normal(jax.random.PRNGKey(seed), (jj, n),
-                                   jnp.float32)
-    rho2_arr = jnp.asarray([rho2.at(t) for t in range(n_iters)], jnp.float32)
+        if init == "local":
+            # placeholder shard_map operand; overwritten per-node by the
+            # local kPCA solution once K_j's eigendecomposition exists.
+            local_init = True
+            alpha0 = jnp.zeros((jj, n), jnp.float32)
+        elif init == "paper":
+            alpha0 = jax.random.normal(jax.random.PRNGKey(seed), (jj, n),
+                                       jnp.float32)
+        else:
+            raise ValueError(f"unknown init {init!r}")
+    rho2_arr = jnp.asarray([rho2.at(t) for t in range(t0, t0 + n_iters)],
+                           jnp.float32)
     rho_self = float(rho1) if include_self else 0.0
 
     offsets = ring_shifts(hops)                 # [-r..-1, 1..r]
@@ -106,37 +139,49 @@ def dkpca_distributed(
     slot_of.update({o: i + 1 for i, o in enumerate(offsets)})
     rev_static = [slot_of[-o] for o in offsets]
 
+    if b0 is None:
+        b0 = jnp.zeros((jj, n, s_slots), jnp.float32)
+    else:
+        b0 = jnp.asarray(b0, jnp.float32)
+        assert b0.shape == (jj, n, s_slots), (b0.shape, (jj, n, s_slots))
+
     fn = partial(_node_fn, axes=axis_names, j_nodes=j_nodes,
                  offsets=tuple(offsets), rev_static=tuple(rev_static),
                  s_slots=s_slots, spec=spec, center=center,
-                 rho_self=rho_self, project=project, n_iters=n_iters,
-                 use_pallas=use_pallas, message_dtype=message_dtype,
-                 unroll_iters=unroll_iters)
+                 rho_self=rho_self, include_self=include_self,
+                 project=project, n_iters=n_iters, t0=t0,
+                 local_init=local_init, use_pallas=use_pallas,
+                 message_dtype=message_dtype, unroll_iters=unroll_iters)
     shmap = shard_map(
         fn, mesh=mesh,
-        in_specs=(P(axis_names, None, None), P(axis_names, None), P(), P()),
-        out_specs=(P(axis_names, None), P(None, axis_names, None),
-                   P(None), P(None, axis_names)),
+        in_specs=(P(axis_names, None, None), P(axis_names, None),
+                  P(axis_names, None, None), P(), P()),
+        out_specs=(P(axis_names, None), P(axis_names, None, None),
+                   P(None, axis_names, None), P(None), P(None, axis_names)),
         # Pallas calls inside the body produce ShapeDtypeStructs without vma
         # annotations; disable the varying-mesh-axes checker for this map.
         check_vma=False,
     )
     with mesh:
-        alpha, hist, res, zn = jax.jit(shmap)(x_nodes, alpha0, g, rho2_arr)
+        alpha, b_f, hist, res, zn = jax.jit(shmap)(
+            x_nodes, alpha0, b0, g, rho2_arr)
     return DistDkpcaResult(alpha=alpha, alpha_hist=hist, primal_residual=res,
-                           znorm2_hist=zn)
+                           znorm2_hist=zn, b=b_f)
 
 
-def _node_fn(x_blk, a_blk, g, rho2_arr, *, axes, j_nodes, offsets, rev_static,
-             s_slots, spec, center, rho_self, project, n_iters, use_pallas,
+def _node_fn(x_blk, a_blk, b_blk, g, rho2_arr, *, axes, j_nodes, offsets,
+             rev_static, s_slots, spec, center, rho_self, include_self,
+             project, n_iters, t0, local_init=False, use_pallas=False,
              message_dtype=None, unroll_iters=False):
-    """Per-node SPMD program. x_blk: (1, N, M); a_blk: (1, N).
+    """Per-node SPMD program. x_blk: (1, N, M); a_blk: (1, N);
+    b_blk: (1, N, S).
 
     message_dtype (e.g. jnp.bfloat16): §Perf knob — cast per-iteration
     ppermute payloads (alpha, K^-1 B columns, z-projections) to a narrower
     dtype before the wire, halving ICI bytes; accumulation stays fp32."""
     x = x_blk[0]
     alpha = a_blk[0]
+    b0 = b_blk[0]
     n = x.shape[0]
 
     def gram_fn(xa, xb):
@@ -182,71 +227,33 @@ def _node_fn(x_blk, a_blk, g, rho2_arr, *, axes, j_nodes, offsets, rev_static,
 
     k_loc = kcross[0, 0]
     lam, vec = psd_jitter_eigh(k_loc)
-    inv_lam = jnp.where(lam > 1e-5 * lam[-1], 1.0 / lam, 0.0)
+    if local_init:
+        # initial_alpha(setup, "local") semantics: each node's own top
+        # kernel principal component, v1 / sqrt(lam1), so ||w_j|| = 1.
+        alpha = local_solution_alpha(lam, vec)
 
     n_nbr = len(offsets)
-    rho_bar_base = rho_self  # + n_nbr * rho2 (per-iteration)
+    maskf = jnp.concatenate(
+        [jnp.full((1,), 1.0 if include_self else 0.0, jnp.float32),
+         jnp.ones((n_nbr,), jnp.float32)])
+    ops = SolverOps(kcross=kcross, k=k_loc, lam=lam, vec=vec, mask=maskf)
+    comm = RingComm(axes, j_nodes, offsets, rev_static,
+                    message_dtype=message_dtype)
 
     def iteration(carry, t):
-        alpha, b = carry                                   # (N,), (N, S)
-        rho2 = rho2_arr[t]
-        rho_bar = rho_bar_base + n_nbr * rho2
-
-        # K^-1 B (all slots at once)
-        m1 = vec @ ((vec.T @ b) * inv_lam[:, None])        # (N, S)
-
-        # ---- message round 1: alpha + K^-1 B columns ---------------------
-        def send(v, off):
-            if message_dtype is not None:
-                v = v.astype(message_dtype)
-            r = _ring_recv(v, axes, off, j_nodes)
-            return r.astype(jnp.float32) if message_dtype is not None else r
-
-        recv_m1 = [send(m1[:, rev_static[d]], offsets[d])
-                   for d in range(n_nbr)]
-        recv_a = [send(alpha, offsets[d]) for d in range(n_nbr)]
-        c0 = (m1[:, 0] + rho_self * alpha) / rho_bar
-        c = jnp.stack([c0] + [(recv_m1[d] + rho2 * recv_a[d]) / rho_bar
-                              for d in range(n_nbr)])      # (S, N)
-
-        znorm2 = jnp.einsum("an,abnm,bm->", c, kcross, c)
-        rs = jax.lax.rsqrt(jnp.maximum(znorm2, 1e-30))
-        scale = jnp.where(znorm2 > 1.0, rs, 1.0)
-        p = scale * jnp.einsum("abnm,bm->an", kcross, c)   # (S, N)
-
-        # ---- message round 2: z-projections ------------------------------
-        g_cols = [p[0]] + [send(p[rev_static[d]], offsets[d])
-                           for d in range(n_nbr)]
-        g_mat = jnp.stack(g_cols, axis=1)                  # (N, S)
-
-        # ---- alpha update (eq. 12) ---------------------------------------
+        st = carry
         rho_slots = jnp.concatenate(
-            [jnp.full((1,), rho_self), jnp.full((n_nbr,), rho2)])
-        rhs = jnp.sum(rho_slots[None, :] * g_mat - b, axis=1)
-        den = rho_bar * lam - 2.0 * lam * lam
-        # see admm.py: drop non-PD directions during rho warm-up
-        inv_den = jnp.where((lam > 1e-5 * lam[-1]) & (den > 0),
-                            1.0 / den, 0.0)
-        alpha_n = vec @ ((vec.T @ rhs) * inv_den)
+            [jnp.full((1,), rho_self), jnp.full((n_nbr,), rho2_arr[t])])
+        new, res = admm_step(ops, comm, st, rho_slots, project)
+        return new, (new.alpha, res, new.znorm2)
 
-        # ---- eta update (eq. 13) -----------------------------------------
-        ka = k_loc @ alpha_n
-        b_n = b + rho_slots[None, :] * (ka[:, None] - g_mat)
-        if rho_self == 0.0:
-            b_n = b_n.at[:, 0].set(0.0)
-
-        res2 = jax.lax.psum(jnp.sum((ka[:, None] - g_mat) ** 2
-                                    * (rho_slots[None, :] > 0)), axes)
-
-        if project == "rescale":
-            zmax = jnp.sqrt(jnp.maximum(
-                jax.lax.pmax(znorm2, axes), 1e-30))
-            gain = jnp.where(zmax < 1.0, 1.0 / zmax, 1.0)
-            alpha_n = alpha_n * gain
-            b_n = b_n * gain
-        return (alpha_n, b_n), (alpha_n, jnp.sqrt(res2), znorm2)
-
-    b0 = pvary(jnp.zeros((n, s_slots), jnp.float32), axes)
-    (alpha_f, _), (ahist, rhist, znhist) = jax.lax.scan(
-        iteration, (alpha, b0), jnp.arange(n_iters), unroll=unroll_iters)
-    return (alpha_f[None], ahist[:, None, :], rhist, znhist[:, None])
+    state0 = AdmmState(
+        alpha=alpha, b=b0, g=pvary(jnp.zeros((n, s_slots), jnp.float32),
+                                   axes),
+        znorm2=pvary(jnp.zeros((), jnp.float32), axes),
+        t=jnp.asarray(t0, jnp.int32),
+        rho=pvary(jnp.zeros((s_slots,), jnp.float32), axes))
+    final, (ahist, rhist, znhist) = jax.lax.scan(
+        iteration, state0, jnp.arange(n_iters), unroll=unroll_iters)
+    return (final.alpha[None], final.b[None], ahist[:, None, :], rhist,
+            znhist[:, None])

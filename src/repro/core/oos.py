@@ -32,7 +32,7 @@ sets, which ``landmark_schedule``'s fixed-seed prefixes guarantee.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +56,12 @@ class FittedKpca:
     bias:          (C,) constant score offset (``mu_bar sum_i alpha_i
                    - m . alpha`` for a centered fit; 0 otherwise).
     gamma:         () resolved RBF bandwidth actually used at fit time.
+    k_row_mean:    optional (L,) cached kernel mean statistics
+                   m_i = mean_t K(x_i, t) over the training set — kept so
+                   ``refresh_coefficients`` can rebuild the centering terms
+                   for NEW coefficients without re-forming the training
+                   Gram (None for uncentered or compressed models).
+    k_grand_mean:  optional () cached grand mean mu_bar (same caveat).
     spec:          kernel spec (static pytree metadata).
     """
 
@@ -64,6 +70,8 @@ class FittedKpca:
     row_mean_coef: jax.Array
     bias: jax.Array
     gamma: jax.Array
+    k_row_mean: Optional[jax.Array] = None
+    k_grand_mean: Optional[jax.Array] = None
     spec: KernelSpec = KernelSpec()
 
     @property
@@ -80,8 +88,8 @@ class FittedKpca:
 
 
 def _flatten(m: FittedKpca):
-    return ((m.x_support, m.coefs, m.row_mean_coef, m.bias, m.gamma),
-            m.spec)
+    return ((m.x_support, m.coefs, m.row_mean_coef, m.bias, m.gamma,
+             m.k_row_mean, m.k_grand_mean), m.spec)
 
 
 def _unflatten(spec, leaves):
@@ -129,12 +137,14 @@ def from_dual(x_train: jax.Array, alpha: jax.Array, spec: KernelSpec,
         alpha_sum = jnp.sum(alpha, axis=0)                # (C,)
         row_mean_coef = -alpha_sum
         bias = mu_bar * alpha_sum - m @ alpha
+        stats = dict(k_row_mean=m, k_grand_mean=mu_bar)
     else:
         row_mean_coef = jnp.zeros((c,), jnp.float32)
         bias = jnp.zeros((c,), jnp.float32)
+        stats = {}
     return FittedKpca(x_support=x_train, coefs=alpha,
                       row_mean_coef=row_mean_coef, bias=bias,
-                      gamma=g.astype(jnp.float32), spec=spec)
+                      gamma=g.astype(jnp.float32), spec=spec, **stats)
 
 
 def fit_central(x: jax.Array, spec: KernelSpec, n_components: int = 1,
@@ -178,6 +188,78 @@ def from_decentralized(x_nodes: jax.Array,
         [jnp.reshape(a, (j * n,)) for a in alpha], axis=1) / j
     return from_dual(x_nodes.reshape(j * n, m), pooled_alpha, spec,
                      gamma=gamma, center=center)
+
+
+def refresh_coefficients(model: FittedKpca,
+                         alpha: Union[jax.Array, Sequence[jax.Array]]
+                         ) -> FittedKpca:
+    """Rebuild a ``FittedKpca`` around NEW dual coefficients — the
+    streaming-alpha path: a still-running ADMM driver hands its live
+    ``AdmmState.alpha`` here every few chunks and publishes the result
+    (``repro.serve.publisher.ModelHandle``) without ever re-forming the
+    training Gram.
+
+    The support set, bandwidth and kernel spec are reused as-is; the
+    centering terms (row_mean_coef, bias) are recomputed from the CACHED
+    kernel mean statistics (``k_row_mean``/``k_grand_mean``, recorded at
+    fit time by ``from_dual(center=True)``) — an O(L*C) update instead of
+    the O(L^2) Gram pass.
+
+    Args:
+      model: centered fit carrying its kernel-mean cache (or an uncentered
+        fit, for which the centering terms stay zero). Compressed models
+        lost the support-set/coefficient correspondence and are rejected.
+      alpha: the new dual solution — (L,) / (L, C) on the pooled support
+        set, a node-major (J, N) / (J, N, C) live solver state, or a list
+        of (J, N) per-component solutions; node-major input is pooled
+        exactly like ``from_decentralized`` (concat / J).
+
+    Returns:
+      A new ``FittedKpca`` (the input model is unchanged).
+    """
+    if not isinstance(model, FittedKpca):
+        raise TypeError(
+            f"refresh_coefficients takes a FittedKpca, got "
+            f"{type(model).__name__}; per-shard refresh of a sharded "
+            f"model is a ROADMAP follow-up")
+    l_full = model.n_support
+    if isinstance(alpha, (list, tuple)):
+        first = jnp.asarray(alpha[0])
+        j = first.shape[0] if first.ndim == 2 else 1
+        alpha = jnp.stack(
+            [jnp.reshape(jnp.asarray(a), (-1,)) for a in alpha], axis=1)
+    else:
+        alpha = jnp.asarray(alpha)
+        j = 1
+        if alpha.ndim == 3 or (alpha.ndim == 2 and alpha.shape[0] != l_full):
+            # node-major (J, N[, C]) live solver state
+            j = alpha.shape[0]
+            alpha = alpha.reshape(j * alpha.shape[1], -1)
+    if alpha.shape[0] != l_full:
+        raise ValueError(
+            f"alpha with leading dim {alpha.shape[0]} does not match "
+            f"the support set ({l_full} rows); compressed models "
+            f"cannot be refreshed — refit and re-compress instead")
+    alpha = _as_2d(alpha).astype(jnp.float32) / j
+    c = alpha.shape[1]
+
+    if model.k_row_mean is not None:
+        alpha_sum = jnp.sum(alpha, axis=0)
+        row_mean_coef = -alpha_sum
+        bias = model.k_grand_mean * alpha_sum - model.k_row_mean @ alpha
+    else:
+        if bool(np.any(np.asarray(model.row_mean_coef))) or \
+                bool(np.any(np.asarray(model.bias))):
+            raise ValueError(
+                "model is centered but carries no kernel-mean cache "
+                "(k_row_mean/k_grand_mean) — refit with "
+                "from_dual(center=True) to enable refresh_coefficients")
+        row_mean_coef = jnp.zeros((c,), jnp.float32)
+        bias = jnp.zeros((c,), jnp.float32)
+    return FittedKpca(x_support=model.x_support, coefs=alpha,
+                      row_mean_coef=row_mean_coef, bias=bias,
+                      gamma=model.gamma, k_row_mean=model.k_row_mean,
+                      k_grand_mean=model.k_grand_mean, spec=model.spec)
 
 
 def project(model: FittedKpca, x_query: jax.Array,
@@ -498,6 +580,9 @@ def save_fitted(ckpt_dir: str, model: FittedKpca) -> str:
     tree = {"x_support": model.x_support, "coefs": model.coefs,
             "row_mean_coef": model.row_mean_coef, "bias": model.bias,
             "gamma": model.gamma}
+    if model.k_row_mean is not None:
+        tree["k_row_mean"] = model.k_row_mean
+        tree["k_grand_mean"] = model.k_grand_mean
     meta = {"kind": "fitted_kpca", "spec": dataclasses.asdict(model.spec)}
     return save_checkpoint(ckpt_dir, 0, tree, metadata=meta, keep_last=1)
 
@@ -511,7 +596,9 @@ def load_fitted(ckpt_dir: str) -> FittedKpca:
     spec = KernelSpec(**meta["spec"])
     return FittedKpca(x_support=tree["x_support"], coefs=tree["coefs"],
                       row_mean_coef=tree["row_mean_coef"],
-                      bias=tree["bias"], gamma=tree["gamma"], spec=spec)
+                      bias=tree["bias"], gamma=tree["gamma"],
+                      k_row_mean=tree.get("k_row_mean"),
+                      k_grand_mean=tree.get("k_grand_mean"), spec=spec)
 
 
 def save_sharded(ckpt_dir: str, model: ShardedFittedKpca) -> str:
@@ -551,5 +638,6 @@ __all__ = [
     "FittedKpca", "ShardedFittedKpca", "compress", "effective_coefs",
     "finalize_partial_scores", "fit_central", "from_dual",
     "from_decentralized", "gather_fitted", "landmark_schedule", "load_fitted",
-    "load_sharded", "project", "save_fitted", "save_sharded", "shard_fitted",
+    "load_sharded", "project", "refresh_coefficients", "save_fitted",
+    "save_sharded", "shard_fitted",
 ]

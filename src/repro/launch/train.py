@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 import logging
 
-import jax
 
 from ..configs import get_config
 from ..data.tokens import TokenStream

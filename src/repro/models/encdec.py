@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .attention import KVCache, _mask_bias, gqa_forward, init_gqa, sdpa
+from .attention import KVCache, gqa_forward, init_gqa, sdpa
 from .common import (ParamCollector, ScanBlock, StackedCollector,
                      constrain_act, dtype_of, rms_norm, slice_layer)
 from .mlp import init_mlp, mlp_forward

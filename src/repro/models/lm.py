@@ -12,7 +12,7 @@ masked to text positions.
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Optional
 
-import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig

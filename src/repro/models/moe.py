@@ -20,7 +20,6 @@ shapes) we use C = T*k, which makes the layer exactly drop-free.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

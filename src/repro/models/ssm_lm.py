@@ -21,7 +21,6 @@ def ssm_prefill(params, cfg, batch, max_len: int, mesh=None,
     """Parallel prefill: chunked forward over the whole prompt, emitting the
     per-layer recurrent states for decode continuation (production path —
     NOT the sequential per-token recurrence)."""
-    import jax as _jax
     import jax.numpy as _jnp
     tokens = batch["tokens"]
     x = params["embed"][tokens].astype(dtype_of(cfg.compute_dtype))

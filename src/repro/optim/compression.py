@@ -17,12 +17,10 @@ aggregated exactly (they are tiny)."""
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def _fold(g: jax.Array) -> jax.Array:

@@ -1,7 +1,9 @@
 from .engine import DecodeEngine, ServeConfig
 from .kpca_engine import (EngineStats, KpcaEngine, KpcaServeConfig,
                           RequestStats)
+from .publisher import ModelHandle, stream_chunks
 from .sharded import project_sharded
 
 __all__ = ["DecodeEngine", "EngineStats", "KpcaEngine", "KpcaServeConfig",
-           "RequestStats", "ServeConfig", "project_sharded"]
+           "ModelHandle", "RequestStats", "ServeConfig", "project_sharded",
+           "stream_chunks"]

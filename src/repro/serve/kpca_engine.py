@@ -33,6 +33,7 @@ import numpy as np
 
 from ..core import oos
 from ..core.oos import FittedKpca, ShardedFittedKpca
+from .publisher import ModelHandle
 
 
 @dataclasses.dataclass
@@ -62,6 +63,7 @@ class RequestStats:
     request_id: int
     n_queries: int
     latency_s: float              # wall time inside the engine for this req
+    model_version: int = 0        # handle version this request was served at
 
 
 @dataclasses.dataclass
@@ -94,18 +96,30 @@ class KpcaEngine:
     The batching/bucketing layer is identical for both — slabs are
     replicated to every shard, so the engine's traffic shaping composes
     with device sharding unchanged.
+
+    Live updates: the engine reads its model THROUGH a versioned
+    ``repro.serve.publisher.ModelHandle`` (a bare model is wrapped in a
+    private one). Each flush snapshots (model, version) once, so every
+    slab of that flush — and therefore every in-flight request — is scored
+    against one consistent version even if a publish lands mid-flush; the
+    next flush picks up the new version. ``RequestStats.model_version``
+    records which version served each request.
     """
 
-    def __init__(self, model: Union[FittedKpca, ShardedFittedKpca],
+    def __init__(self,
+                 model: Union[FittedKpca, ShardedFittedKpca, ModelHandle],
                  cfg: KpcaServeConfig = None, mesh=None):
         """Args:
-          model: servable artifact (plain or sharded).
+          model: servable artifact (plain or sharded) or a ``ModelHandle``
+            wrapping one (live-publishable).
           cfg: batching/bucketing/backend knobs (``KpcaServeConfig``).
           mesh: for sharded models only — 1-D device mesh with
             ``model.n_shards`` devices; None builds one over local devices
             (or falls back to a same-math single-device reduction).
         """
-        self.model = model
+        self.handle = model if isinstance(model, ModelHandle) \
+            else ModelHandle(model)
+        model = self.handle.current()
         self.cfg = cfg or KpcaServeConfig()
         self._buckets = self.cfg.buckets()
         self._compiled_shapes = set()
@@ -133,6 +147,11 @@ class KpcaEngine:
                                    interpret=self.cfg.interpret)
 
         self._proj = jax.jit(_proj)
+
+    @property
+    def model(self):
+        """The live model (read through the handle)."""
+        return self.handle.current()
 
     # ---- request API -----------------------------------------------------
 
@@ -174,6 +193,9 @@ class KpcaEngine:
             raise
 
     def _serve(self, queue) -> dict:
+        # One consistent (model, version) snapshot for the whole flush:
+        # in-flight slabs finish on it even if a publish lands mid-flush.
+        model, version = self.handle.get()
         results = {rid: [] for rid, _ in queue}
         touched = {rid: 0.0 for rid, _ in queue}
         sizes = {rid: x.shape[0] for rid, x in queue}
@@ -193,7 +215,7 @@ class KpcaEngine:
             slab = np.zeros((bucket, stream.shape[1]), np.float32)
             slab[:take] = stream[pos:pos + take]
             t0 = time.perf_counter()
-            scores = np.asarray(self._run_slab(slab))
+            scores = np.asarray(self._run_slab(model, slab))
             dt = time.perf_counter() - t0
             padded += bucket - take
             total_dt += dt
@@ -210,8 +232,8 @@ class KpcaEngine:
         self.stats.n_queries += stream.shape[0]
         for rid, _ in queue:
             self.stats.per_request.append(
-                RequestStats(rid, sizes[rid], touched[rid]))
-        empty = np.zeros((0, self.model.n_components), np.float32)
+                RequestStats(rid, sizes[rid], touched[rid], version))
+        empty = np.zeros((0, model.n_components), np.float32)
         return {rid: np.concatenate(parts, axis=0) if parts else empty
                 for rid, parts in results.items()}
 
@@ -230,11 +252,11 @@ class KpcaEngine:
                 return b
         return self._buckets[-1]
 
-    def _run_slab(self, slab: np.ndarray) -> jax.Array:
+    def _run_slab(self, model, slab: np.ndarray) -> jax.Array:
         xq = jnp.asarray(slab)
         if self.cfg.query_dtype is not None:
             xq = xq.astype(self.cfg.query_dtype)
         if xq.shape not in self._compiled_shapes:
             self._compiled_shapes.add(xq.shape)
             self.stats.n_compiles += 1
-        return self._proj(self.model, xq)
+        return self._proj(model, xq)

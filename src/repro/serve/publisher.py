@@ -1,0 +1,118 @@
+"""Versioned model publishing: the trainer-to-server hand-off.
+
+A still-running ADMM driver (``repro.core.solver.run_chunked``) produces a
+stream of coefficient snapshots; the serving side must pick them up without
+dropping or mixing in-flight work. ``ModelHandle`` is the seam: a
+thread-safe, versioned, atomically-swappable reference to a servable model.
+``KpcaEngine`` reads THROUGH the handle — each flush snapshots (model,
+version) once up front, so every slab of that flush scores against one
+consistent model version even if a publish lands mid-flush; the next flush
+sees the new version. Publishing never blocks serving (the swap is a
+reference assignment under a lock, not a copy).
+
+End-to-end streaming glue: ``stream_chunks`` consumes a ``run_chunked``
+iterator and republishes a refreshed ``FittedKpca``
+(``repro.core.oos.refresh_coefficients`` — cached kernel-mean statistics,
+no Gram re-formation) every k chunks.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Iterable, Optional, Tuple
+
+from ..core import oos
+
+
+class ModelHandle:
+    """Thread-safe versioned reference to a servable kPCA model.
+
+    The handle pins the model TYPE at construction (``FittedKpca`` or
+    ``ShardedFittedKpca``) — and, for sharded models, the shard count: the
+    engine compiles its projection path against that type (and its mesh
+    against that shard count), so a publish may change coefficients/shapes
+    (jit re-traces on shape changes) but not the artifact kind or the
+    shard layout.
+    """
+
+    def __init__(self, model, version: int = 0):
+        self._lock = threading.Lock()
+        self._model = model
+        self._version = version
+        self._kind = type(model)
+        # the engine's compiled sharded path also pins its mesh to the
+        # initial shard count, so that is part of the contract too
+        self._n_shards = getattr(model, "n_shards", None)
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+    def current(self):
+        """The live model (convenience; use ``get`` when the matching
+        version number matters)."""
+        with self._lock:
+            return self._model
+
+    def get(self) -> Tuple[object, int]:
+        """Consistent (model, version) snapshot — THE read path: take it
+        once per batch so all work in the batch serves one version."""
+        with self._lock:
+            return self._model, self._version
+
+    def publish(self, model) -> int:
+        """Atomically swap in a new model; returns its version number.
+
+        In-flight readers keep the snapshot they took; only subsequent
+        ``get``/``current`` calls see the new model.
+        """
+        if not isinstance(model, self._kind):
+            raise TypeError(
+                f"handle serves {self._kind.__name__}, got "
+                f"{type(model).__name__}")
+        if self._n_shards is not None and model.n_shards != self._n_shards:
+            raise ValueError(
+                f"handle serves a {self._n_shards}-shard model (the "
+                f"engine's mesh is pinned to it), got {model.n_shards} "
+                f"shards — re-shard behind a new engine instead")
+        with self._lock:
+            self._model = model
+            self._version += 1
+            return self._version
+
+    def refresh(self, alpha) -> int:
+        """Publish the current model rebuilt around live dual coefficients
+        (``repro.core.oos.refresh_coefficients`` — reuses the cached
+        kernel-mean statistics). Returns the new version.
+
+        Plain ``FittedKpca`` handles only; per-shard refresh of a
+        ``ShardedFittedKpca`` is a ROADMAP follow-up (build the refreshed
+        model yourself and ``publish`` it meanwhile)."""
+        with self._lock:
+            base = self._model
+        return self.publish(oos.refresh_coefficients(base, alpha))
+
+
+def stream_chunks(chunks: Iterable, handle: ModelHandle,
+                  every: int = 1) -> Optional[object]:
+    """Drive a ``repro.core.solver.run_chunked`` iterator to completion,
+    refreshing ``handle`` from the live state every ``every`` chunks (and
+    always at the last chunk). Returns the final ``ChunkResult`` (None if
+    the iterator was empty)."""
+    if every < 1:
+        raise ValueError(f"every must be >= 1, got {every}")
+    last = None
+    pending = False
+    for i, chunk in enumerate(chunks):
+        last = chunk
+        pending = True
+        if (i + 1) % every == 0:
+            handle.refresh(chunk.state.alpha)
+            pending = False
+    if last is not None and pending:
+        handle.refresh(last.state.alpha)
+    return last
+
+
+__all__ = ["ModelHandle", "stream_chunks"]

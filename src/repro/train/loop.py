@@ -13,12 +13,10 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from ..configs.base import ArchConfig
-from ..distributed.sharding import Rules, default_rules, spec_for
-from ..models import build_model
+from ..distributed.sharding import Rules, spec_for
 from ..optim import AdamWConfig, adamw_init, adamw_update
 
 log = logging.getLogger("repro.train")

@@ -12,15 +12,14 @@ from repro.data import node_dataset
 
 SPEC = KernelSpec(kind="rbf", gamma=None)
 
-# The fixture's m=24 / seed=0 regime converges ~3x slower than the paper's
-# 30-iteration budget (mean similarity 0.577 @ 30 iters but 0.996 @ 100;
-# transient dip to 0.40 during the rho2 warm-up). Documented with measured
-# controls and an investigation plan in docs/ADMM_CONVERGENCE.md — do not
-# "fix" by bumping n_iters; the open question is the transient itself.
-SLOW_M24 = pytest.mark.xfail(
-    reason="m=24 fixture: ADMM transient outlasts the 30-iter budget "
-           "(0.58 @ 30 iters vs 1.00 @ 100) — see docs/ADMM_CONVERGENCE.md",
-    strict=False)
+# The fixture's m=24 / seed=0 regime converged ~3x slower than the paper's
+# 30-iteration budget under the paper's Gaussian init (mean similarity 0.577
+# @ 30 iters; transient dip to 0.40 during the rho2 warm-up). The measured
+# fix — now run_admm's default — is the local-solution z warm-start
+# (init="local"): similarity 0.991 after ONE iteration and >= 0.997 by 10
+# under every rho schedule tried. Ablation tables and the closure note are
+# in docs/ADMM_CONVERGENCE.md; test_paper_init_transient_is_characterized
+# below keeps the old regime pinned.
 
 
 @pytest.fixture(scope="module")
@@ -43,7 +42,6 @@ def _mean_similarity(alpha_nodes, nodes, pooled, alpha_gt, gamma):
 
 
 class TestConvergence:
-    @SLOW_M24
     def test_similarity_to_central(self, small_problem):
         nodes, pooled, graph, setup, alpha_gt = small_problem
         res = run_admm(setup, n_iters=30)
@@ -52,7 +50,6 @@ class TestConvergence:
         # Paper Fig 3 reports > 0.9 similarity; small synthetic should match.
         assert mean_sim > 0.85, f"mean similarity too low: {mean_sim}, {sims}"
 
-    @SLOW_M24
     def test_beats_local_baseline(self, small_problem):
         nodes, pooled, graph, setup, alpha_gt = small_problem
         res = run_admm(setup, n_iters=60)
@@ -64,7 +61,6 @@ class TestConvergence:
         # Fig 4: consensus must improve over purely-local solutions.
         assert sim_admm > sim_local - 1e-3, (sim_admm, sim_local)
 
-    @SLOW_M24
     def test_similarity_improves_over_iterations(self, small_problem):
         nodes, pooled, graph, setup, alpha_gt = small_problem
         res = run_admm(setup, n_iters=30)
@@ -121,7 +117,6 @@ class TestTheorem2:
 
 
 class TestPaperMode:
-    @SLOW_M24
     def test_rho_schedule_mode_converges(self, small_problem):
         """Paper §6.1 tuning: rho1=100 fixed, rho2 warm-up 10->50->100."""
         nodes, pooled, graph, setup, alpha_gt = small_problem
@@ -130,6 +125,21 @@ class TestPaperMode:
         mean_sim, _ = _mean_similarity(res.alpha, nodes, pooled, alpha_gt,
                                        setup.gamma)
         assert mean_sim > 0.85
+
+    def test_paper_init_transient_is_characterized(self, small_problem):
+        """Regression pin for the closed m=24 investigation
+        (docs/ADMM_CONVERGENCE.md): under the paper's Gaussian init the
+        transient still outlasts the 30-iteration budget (0.58 @ 30) but
+        the fixed point is right (0.996 @ 100). If this ever flips, the
+        doc's characterization is stale."""
+        nodes, pooled, graph, setup, alpha_gt = small_problem
+        res = run_admm(setup, n_iters=100, init="paper")
+        at30, _ = _mean_similarity(res.alpha_hist[29], nodes, pooled,
+                                   alpha_gt, setup.gamma)
+        at100, _ = _mean_similarity(res.alpha_hist[-1], nodes, pooled,
+                                    alpha_gt, setup.gamma)
+        assert at30 < 0.85, at30        # the transient is real
+        assert at100 > 0.95, at100      # ... and it is only a transient
 
     def test_more_neighbors_not_worse(self):
         """Fig 5 trend: larger |Omega| should not hurt final similarity."""

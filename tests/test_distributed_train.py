@@ -9,7 +9,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 HELPER = os.path.join(os.path.dirname(__file__), "helpers",
                       "check_dp_train.py")

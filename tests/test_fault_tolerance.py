@@ -1,13 +1,10 @@
 """Fault tolerance: node-failure re-knit convergence, train-loop
 checkpoint/restart determinism, NaN-guard skip, straggler monitor."""
 
-import logging
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import ArchConfig
 from repro.core import (KernelSpec, build_setup, central_kpca, run_admm,

@@ -109,7 +109,7 @@ class TestEngineAccounting:
         eng = KpcaEngine(model, KpcaServeConfig(max_batch=8, min_bucket=8))
         rid = eng.submit(_rand((3, 12), seed=8))
 
-        def boom(_slab):
+        def boom(_model, _slab):
             raise RuntimeError("injected")
 
         run_slab, eng._run_slab = eng._run_slab, boom

@@ -44,19 +44,17 @@ class TestFittedKpca:
 
     def test_kpca_project_is_centered_now(self, fitted):
         """The old raw path silently disagreed with a centered fit; the
-        routed-through-oos version must match the centered eigen-scores."""
+        routed-through-oos version must match the centered eigen-scores,
+        and the deprecated ``center=`` kwarg is gone (deprecation cycle
+        finished — build ``oos.from_dual(center=False)`` for a raw fit)."""
         x, model = fitted
         alpha, _, k_c = central_kpca(x, SPEC, 3, center=True,
                                      gamma=model.gamma)
         got = np.asarray(kpca_project(x, x, alpha, SPEC, gamma=model.gamma))
         np.testing.assert_allclose(got, np.asarray(k_c @ alpha),
                                    rtol=1e-5, atol=1e-5)
-        # and the deprecated raw path still exists, warning loudly
-        with pytest.warns(DeprecationWarning):
-            raw = kpca_project(x, x, alpha, SPEC, gamma=model.gamma,
-                               center=False)
-        assert not np.allclose(np.asarray(raw), np.asarray(k_c @ alpha),
-                               atol=1e-3)
+        with pytest.raises(TypeError):
+            kpca_project(x, x, alpha, SPEC, gamma=model.gamma, center=False)
 
     def test_from_decentralized_pools_nodes(self):
         """Packaging semantics: (J, N) node solutions (single or top-k

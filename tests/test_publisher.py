@@ -1,0 +1,240 @@
+"""Tests for the streaming-serving seam: ``oos.refresh_coefficients``
+(cached kernel-mean statistics), the versioned ``ModelHandle``, the
+engine's read-through/version-isolation semantics, and the end-to-end
+train -> refresh -> publish -> serve loop over the chunked driver."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KernelSpec, build_setup, oos, solver
+from repro.core.topology import ring
+from repro.data import node_dataset
+from repro.serve import KpcaEngine, KpcaServeConfig, ModelHandle, \
+    stream_chunks
+
+SPEC = KernelSpec(kind="rbf", gamma=0.25)
+
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x = jnp.asarray(_rand((48, 10), seed=0))
+    return x, oos.fit_central(x, SPEC, n_components=2, center=True)
+
+
+class TestRefreshCoefficients:
+    def test_matches_full_refit(self, fitted):
+        """Refreshing with new alpha == rebuilding from scratch with
+        from_dual (which re-forms the Gram), to fp32 resolution."""
+        x, model = fitted
+        alpha2 = jnp.asarray(_rand((48, 2), seed=1))
+        got = oos.refresh_coefficients(model, alpha2)
+        want = oos.from_dual(x, alpha2, SPEC, gamma=model.gamma, center=True)
+        xq = jnp.asarray(_rand((9, 10), seed=2))
+        np.testing.assert_allclose(np.asarray(oos.project(got, xq)),
+                                   np.asarray(oos.project(want, xq)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_node_major_alpha_pools_like_from_decentralized(self):
+        nodes = jnp.asarray(_rand((6, 8, 10), seed=3))
+        a1 = jnp.asarray(_rand((6, 8), seed=4))
+        model = oos.from_decentralized(nodes, a1, SPEC, gamma=0.3,
+                                       center=True)
+        a2 = jnp.asarray(_rand((6, 8), seed=5))
+        got = oos.refresh_coefficients(model, a2)
+        want = oos.from_decentralized(nodes, a2, SPEC, gamma=0.3,
+                                      center=True)
+        xq = jnp.asarray(_rand((7, 10), seed=6))
+        np.testing.assert_allclose(np.asarray(oos.project(got, xq)),
+                                   np.asarray(oos.project(want, xq)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_uncentered_model_refreshes_to_zero_centering(self):
+        x = jnp.asarray(_rand((20, 6), seed=7))
+        model = oos.fit_central(x, SPEC, 1, center=False)
+        new = oos.refresh_coefficients(model, jnp.asarray(_rand((20,), 8)))
+        assert not np.any(np.asarray(new.row_mean_coef))
+        assert not np.any(np.asarray(new.bias))
+
+    def test_rejects_mismatched_support(self, fitted):
+        _, model = fitted
+        with pytest.raises(ValueError):
+            oos.refresh_coefficients(model, jnp.ones((7, 2)))
+
+    def test_rejects_centered_model_without_cache(self, fitted):
+        _, model = fitted
+        stripped = dataclasses.replace(model, k_row_mean=None,
+                                       k_grand_mean=None)
+        with pytest.raises(ValueError):
+            oos.refresh_coefficients(stripped, model.coefs)
+
+    def test_cache_survives_save_load(self, fitted, tmp_path):
+        x, model = fitted
+        oos.save_fitted(str(tmp_path / "ck"), model)
+        back = oos.load_fitted(str(tmp_path / "ck"))
+        assert back.k_row_mean is not None
+        alpha2 = jnp.asarray(_rand((48, 2), seed=9))
+        np.testing.assert_allclose(
+            np.asarray(oos.refresh_coefficients(back, alpha2).bias),
+            np.asarray(oos.refresh_coefficients(model, alpha2).bias),
+            rtol=1e-6, atol=1e-6)
+
+
+class TestModelHandle:
+    def test_publish_bumps_version_atomically(self, fitted):
+        _, model = fitted
+        h = ModelHandle(model)
+        assert h.version == 0
+        m2 = oos.refresh_coefficients(model, model.coefs * 2.0)
+        assert h.publish(m2) == 1
+        got, v = h.get()
+        assert v == 1 and got is m2
+
+    def test_rejects_kind_change(self, fitted):
+        _, model = fitted
+        sharded, _ = oos.shard_fitted(model, 2)
+        h = ModelHandle(model)
+        with pytest.raises(TypeError):
+            h.publish(sharded)
+
+    def test_sharded_handle_pins_shard_count(self, fitted):
+        """The engine's mesh is compiled against the initial shard count,
+        so a re-sharded publish must be rejected up front."""
+        _, model = fitted
+        two, _ = oos.shard_fitted(model, 2)
+        four, _ = oos.shard_fitted(model, 4)
+        h = ModelHandle(two)
+        with pytest.raises(ValueError):
+            h.publish(four)
+        two_b, _ = oos.shard_fitted(
+            oos.refresh_coefficients(model, model.coefs * 2.0), 2)
+        assert h.publish(two_b) == 1       # same layout: fine
+
+    def test_refresh_rejects_sharded_models(self, fitted):
+        _, model = fitted
+        sharded, _ = oos.shard_fitted(model, 2)
+        h = ModelHandle(sharded)
+        with pytest.raises(TypeError):
+            h.refresh(model.coefs)
+
+    def test_refresh_publishes_new_coefficients(self, fitted):
+        _, model = fitted
+        h = ModelHandle(model)
+        alpha2 = jnp.asarray(_rand((48, 2), seed=10))
+        assert h.refresh(alpha2) == 1
+        np.testing.assert_allclose(np.asarray(h.current().coefs),
+                                   np.asarray(alpha2), rtol=1e-6, atol=1e-6)
+
+
+class TestEngineVersionIsolation:
+    def test_inflight_flush_finishes_on_old_version(self, fitted):
+        """A publish landing MID-FLUSH (between slabs) must not leak into
+        that flush: all its slabs score on the snapshot taken at flush
+        start; the next flush sees the new version."""
+        _, model = fitted
+        h = ModelHandle(model)
+        eng = KpcaEngine(h, KpcaServeConfig(max_batch=8, min_bucket=8))
+        m2 = oos.refresh_coefficients(model, model.coefs * 2.0)
+
+        x = _rand((20, 10), seed=11)           # 3 slabs at max_batch=8
+        rid = eng.submit(x)
+        run_slab = eng._run_slab
+        fired = dict(n=0)
+
+        def publish_after_first_slab(mdl, slab):
+            out = run_slab(mdl, slab)
+            if fired["n"] == 0:
+                h.publish(m2)                  # lands between slab 0 and 1
+            fired["n"] += 1
+            return out
+
+        eng._run_slab = publish_after_first_slab
+        out = eng.flush()
+        eng._run_slab = run_slab
+        assert fired["n"] == 3
+        np.testing.assert_allclose(
+            out[rid], np.asarray(oos.project(model, jnp.asarray(x))),
+            rtol=1e-5, atol=1e-5)
+        assert eng.stats.per_request[-1].model_version == 0
+
+        rid2 = eng.submit(x)                   # next batch: new version
+        out2 = eng.flush()
+        np.testing.assert_allclose(
+            out2[rid2], np.asarray(oos.project(m2, jnp.asarray(x))),
+            rtol=1e-5, atol=1e-5)
+        assert eng.stats.per_request[-1].model_version == 1
+
+    def test_plain_model_still_works(self, fitted):
+        _, model = fitted
+        eng = KpcaEngine(model, KpcaServeConfig(max_batch=8, min_bucket=8))
+        x = _rand((5, 10), seed=12)
+        out = eng.project_many([x])
+        np.testing.assert_allclose(
+            out[0], np.asarray(oos.project(model, jnp.asarray(x))),
+            rtol=1e-5, atol=1e-5)
+        assert eng.model is model
+
+
+class TestStreamingEndToEnd:
+    def test_driver_publishes_and_engine_serves_live(self):
+        """The acceptance loop: chunked ADMM driver -> refresh_coefficients
+        -> ModelHandle.publish -> KpcaEngine, with the engine serving
+        between chunks and the final served scores matching an offline fit
+        of the final alpha."""
+        spec = KernelSpec(kind="rbf", gamma=None)
+        nodes, _ = node_dataset(n_nodes=6, n_per_node=12, m=8, seed=0)
+        setup = build_setup(jnp.asarray(nodes), ring(6, hops=1), spec)
+
+        # seed model from the warm-start alpha (iteration 0)
+        from repro.core.admm import initial_alpha
+        a0 = initial_alpha(setup, "local")
+        handle = ModelHandle(oos.from_decentralized(
+            nodes, a0, spec, gamma=setup.gamma, center=True))
+        eng = KpcaEngine(handle, KpcaServeConfig(max_batch=8, min_bucket=8))
+        xq = _rand((5, 8), seed=13)
+
+        versions = []
+        driver = solver.run_chunked(setup, n_iters=12, chunk=3, alpha0=a0)
+        for chunk in driver:
+            handle.refresh(chunk.state.alpha)
+            eng.submit(xq)
+            eng.flush()
+            versions.append(eng.stats.per_request[-1].model_version)
+        assert versions == [1, 2, 3, 4]        # one publish per chunk
+
+        final_alpha = chunk.state.alpha
+        want = oos.project(
+            oos.from_decentralized(nodes, final_alpha, spec,
+                                   gamma=setup.gamma, center=True),
+            jnp.asarray(xq))
+        got = eng.project_many([xq])[0]
+        np.testing.assert_allclose(got, np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_stream_chunks_validates_every(self, fitted):
+        _, model = fitted
+        with pytest.raises(ValueError):
+            stream_chunks(iter([]), ModelHandle(model), every=0)
+
+    def test_stream_chunks_glue(self):
+        spec = KernelSpec(kind="rbf", gamma=None)
+        nodes, _ = node_dataset(n_nodes=6, n_per_node=10, m=8, seed=1)
+        setup = build_setup(jnp.asarray(nodes), ring(6, hops=1), spec)
+        from repro.core.admm import initial_alpha
+        a0 = initial_alpha(setup, "local")
+        handle = ModelHandle(oos.from_decentralized(
+            nodes, a0, spec, gamma=setup.gamma, center=True))
+        last = stream_chunks(
+            solver.run_chunked(setup, n_iters=10, chunk=4, alpha0=a0),
+            handle, every=2)
+        # 3 chunks (4+4+2): publishes after chunk 2 and at the tail chunk
+        assert handle.version == 2
+        np.testing.assert_allclose(
+            np.asarray(handle.current().coefs).reshape(6, 10) * 6,
+            np.asarray(last.state.alpha), rtol=1e-6, atol=1e-6)

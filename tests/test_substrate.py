@@ -6,14 +6,13 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import (latest_step, restore_checkpoint,
                               save_checkpoint, save_checkpoint_async)
 from repro.data.tokens import TokenStream
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          compress_local, compression_ratio,
-                         cosine_with_warmup, init_compression_state)
+                         cosine_with_warmup)
 
 
 class TestAdamW:

@@ -1,6 +1,5 @@
 """End-to-end training-loop behaviour on a tiny model (single device)."""
 
-import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig
