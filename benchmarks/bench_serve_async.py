@@ -1,0 +1,128 @@
+"""Async serving benchmark: futures pipeline under concurrent submitters.
+
+Measures what the synchronous serve bench cannot: end-to-end request
+latency (submit -> future resolved, queue wait included) and wall-clock
+throughput when several client threads race one background flusher —
+with and without admission control. The sync ``project_many`` row on the
+same request mix is the baseline; the async rows show what the
+size-or-deadline trigger costs in latency and buys in batching.
+
+Rows follow the harness convention (name, us_per_call, derived).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KernelSpec, oos
+from repro.data import kpca_dataset
+from repro.serve import KpcaEngine, KpcaServeConfig, QueueFullError
+
+SPEC = KernelSpec(kind="rbf")
+
+
+def _fit(n=512, m=128, c=2, seed=0):
+    x = jnp.asarray(kpca_dataset(n, m=m, seed=seed))
+    return oos.fit_central(x, SPEC, n_components=c, center=True)
+
+
+def _request_mix(n_requests, m, max_q=32, seed=0):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, max_q + 1, size=n_requests)
+    return [rng.normal(size=(int(q), m)).astype(np.float32) for q in sizes]
+
+
+def _warm(eng, m):
+    for b in eng.cfg.buckets():
+        eng.project_many([np.zeros((b, m), np.float32)])
+    eng.stats = type(eng.stats)()
+
+
+def _drive_async(eng, reqs, n_threads):
+    """Submit ``reqs`` round-robin from ``n_threads`` threads; returns
+    (wall_s, e2e_latencies list, n_rejected)."""
+    lat = [None] * len(reqs)
+    rejected = [0] * n_threads
+
+    def submitter(tid):
+        for i in range(tid, len(reqs), n_threads):
+            t0 = time.perf_counter()
+            try:
+                fut = eng.submit(reqs[i])
+                fut.result(timeout=60.0)
+            except QueueFullError:             # rejected at submit
+                rejected[tid] += 1
+                continue
+            except Exception:                  # shed while queued
+                continue
+            lat[i] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=submitter, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    return wall, [x for x in lat if x is not None], sum(rejected)
+
+
+def bench_serve_async(m: int = 128):
+    rows = []
+    n_train, n_requests = 512, 192
+    model = _fit(n=n_train, m=m)
+    reqs = _request_mix(n_requests, m, seed=1)
+    n_q = sum(r.shape[0] for r in reqs)
+
+    # ---- sync baseline: same mix, one blocking project_many ---------------
+    cfg = KpcaServeConfig(max_batch=128, min_bucket=8)
+    eng = KpcaEngine(model, cfg)
+    _warm(eng, m)
+    t0 = time.perf_counter()
+    eng.project_many(reqs)
+    dt = time.perf_counter() - t0
+    rows.append(("serve_async/sync_baseline", dt / n_requests * 1e6,
+                 f"qps={n_q / dt:.0f};requests={n_requests}"))
+
+    # ---- async futures pipeline vs submitter concurrency ------------------
+    for n_threads in (1, 2, 4):
+        eng = KpcaEngine(model, KpcaServeConfig(
+            max_batch=128, min_bucket=8, flush_max_wait_s=0.002))
+        _warm(eng, m)
+        with eng:
+            wall, lat, _ = _drive_async(eng, reqs, n_threads)
+        p50 = float(np.percentile(lat, 50)) * 1e3
+        p99 = float(np.percentile(lat, 99)) * 1e3
+        rows.append((
+            f"serve_async/threads{n_threads}", wall / n_requests * 1e6,
+            f"qps={n_q / wall:.0f};e2e_p50_ms={p50:.2f};"
+            f"e2e_p99_ms={p99:.2f};flushes={eng.stats.n_flushes}"))
+
+    # ---- admission control: bounded queue under the same burst ------------
+    for factor, policy in ((None, "off"), (2, "reject"), (2, "shed")):
+        eng = KpcaEngine(model, KpcaServeConfig(
+            max_batch=128, min_bucket=8, flush_max_wait_s=0.002,
+            queue_factor=factor,
+            admission=policy if factor else "reject"))
+        _warm(eng, m)
+        with eng:
+            wall, lat, rejected = _drive_async(eng, reqs, 4)
+        served = len(lat)
+        p99 = float(np.percentile(lat, 99)) * 1e3 if lat else 0.0
+        rows.append((
+            f"serve_async/admission_{policy}", wall / n_requests * 1e6,
+            f"served={served}/{n_requests};rejected={rejected};"
+            f"shed={eng.stats.n_shed};e2e_p99_ms={p99:.2f};"
+            f"depth_bound={eng.cfg.queue_capacity()}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in bench_serve_async():
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

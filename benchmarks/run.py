@@ -33,9 +33,9 @@ sys.path.insert(0, _ROOT)                      # `python benchmarks/run.py ...`
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 ALL_SUITES = ["fig3", "fig4", "fig5", "rt", "kernels", "roofline", "serve",
-              "shard"]
-QUICK_DIM_SUITES = ("fig3", "fig4", "fig5", "rt", "serve", "shard")
-SMOKE_SUITES = ["kernels", "serve", "shard"]
+              "shard", "async"]
+QUICK_DIM_SUITES = ("fig3", "fig4", "fig5", "rt", "serve", "shard", "async")
+SMOKE_SUITES = ["kernels", "serve", "shard", "async"]
 
 
 def _parse_args():
@@ -88,6 +88,7 @@ def main() -> None:
                                        bench_similarity_vs_nodes,
                                        bench_similarity_vs_samples)
     from benchmarks.bench_roofline import bench_roofline_summary
+    from benchmarks.bench_serve_async import bench_serve_async
     from benchmarks.bench_serve_kpca import (bench_serve_kpca,
                                              bench_serve_sharded)
 
@@ -100,6 +101,7 @@ def main() -> None:
         "roofline": bench_roofline_summary,
         "serve": bench_serve_kpca,
         "shard": bench_serve_sharded,
+        "async": bench_serve_async,
     }
 
     assert list(suites) == ALL_SUITES, "keep ALL_SUITES in sync"

@@ -1,13 +1,21 @@
-"""Streaming alpha: serve projections FROM A STILL-RUNNING ADMM fit.
+"""Streaming alpha, fully async: serve projections FROM A STILL-RUNNING
+ADMM fit with non-blocking publishes and a residual-driven refresh cadence.
 
     PYTHONPATH=src python examples/streaming_serve.py
 
-The chunked solver driver (repro.core.solver.run_chunked) yields its live
-state every few iterations; each snapshot is rebuilt into a servable
-FittedKpca with the cached kernel-mean statistics (no Gram re-formation)
-and atomically published into the engine's ModelHandle. Queries keep
-flowing the whole time — each flush serves one consistent model version —
-and the served scores sharpen chunk by chunk as the consensus converges."""
+Three threads cooperate, none blocking the others:
+  * the DRIVER thread (here: the main loop) iterates the chunked solver
+    (repro.core.solver.run_chunked) and hands each live coefficient
+    snapshot to the publisher in O(1) — but only when the residual-
+    improvement policy says the update is worth publishing (the serving
+    analogue of COKE's communication censoring);
+  * the PUBLISHER thread (repro.serve.BackgroundPublisher) rebuilds a
+    servable FittedKpca from the cached kernel-mean statistics (no Gram
+    re-formation) and atomically swaps it into the ModelHandle, coalescing
+    latest-wins if the driver outpaces it;
+  * the FLUSHER thread inside the engine drains submitted queries on a
+    size-or-deadline trigger; futures resolve as slabs complete, each
+    against one consistent model version."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +24,8 @@ from repro.core import KernelSpec, build_setup, oos, solver
 from repro.core.admm import initial_alpha
 from repro.core.topology import ring
 from repro.data import node_dataset
-from repro.serve import KpcaEngine, KpcaServeConfig, ModelHandle
+from repro.serve import (BackgroundPublisher, KpcaEngine, KpcaServeConfig,
+                         ModelHandle)
 
 
 def main():
@@ -28,25 +37,40 @@ def main():
     a0 = initial_alpha(setup, "local")
     handle = ModelHandle(oos.from_decentralized(
         nodes, a0, spec, gamma=setup.gamma, center=True))
-    engine = KpcaEngine(handle, KpcaServeConfig(max_batch=32, min_bucket=8))
+    engine = KpcaEngine(handle, KpcaServeConfig(
+        max_batch=32, min_bucket=8, flush_max_wait_s=0.002))
 
     xq = np.random.default_rng(1).normal(size=(16, 24)).astype(np.float32)
     gold = oos.project(oos.fit_central(jnp.asarray(pooled), spec, 1,
                                        gamma=setup.gamma), jnp.asarray(xq))
     gold = np.asarray(gold)[:, 0]
 
-    print("chunk  iter  version  primal-res  corr(served, central-fit)")
-    for i, chunk in enumerate(
-            solver.run_chunked(setup, n_iters=24, chunk=4, tol=1e-3)):
-        version = handle.refresh(chunk.state.alpha)   # publish live coefs
-        scores = engine.project_many([xq])[0][:, 0]   # serve on new version
-        corr = float(np.corrcoef(scores, gold)[0, 1])
-        print(f"{i + 1:5d}  {int(chunk.state.t):4d}  {version:7d}  "
-              f"{float(chunk.primal_residual[-1]):10.2e}  {abs(corr):.4f}")
+    policy = solver.ResidualImprovement(rel_drop=0.15)
+    print("chunk  iter  version  primal-res  published?  "
+          "corr(served, central-fit)")
+    with BackgroundPublisher(handle) as pub, engine:
+        chunk = None
+        fired = False
+        for i, chunk in enumerate(
+                solver.run_chunked(setup, n_iters=24, chunk=4, tol=1e-3)):
+            fired = policy.should_refresh(chunk)
+            if fired:
+                pub.refresh(chunk.state.alpha)   # O(1): never blocks the fit
+            fut = engine.submit(xq)              # async: future, not scores
+            scores = fut.result(timeout=30.0)[:, 0]
+            corr = float(np.corrcoef(scores, gold)[0, 1])
+            print(f"{i + 1:5d}  {int(chunk.state.t):4d}  "
+                  f"{handle.version:7d}  "
+                  f"{float(chunk.primal_residual[-1]):10.2e}  "
+                  f"{'yes' if fired else 'censored':>10}  {abs(corr):.4f}")
+        if chunk is not None and not fired:      # censored tail: the served
+            pub.refresh(chunk.state.alpha)       # model must not lag the fit
+        pub.drain()                              # final snapshot published
 
     stats = engine.stats
     print(f"served {stats.n_queries} queries across {stats.n_requests} "
-          f"requests while fitting; final model version {handle.version}")
+          f"requests while fitting; published {pub.n_published} versions "
+          f"({pub.n_coalesced} coalesced); final version {handle.version}")
 
 
 if __name__ == "__main__":

@@ -190,39 +190,14 @@ def from_decentralized(x_nodes: jax.Array,
                      gamma=gamma, center=center)
 
 
-def refresh_coefficients(model: FittedKpca,
-                         alpha: Union[jax.Array, Sequence[jax.Array]]
-                         ) -> FittedKpca:
-    """Rebuild a ``FittedKpca`` around NEW dual coefficients — the
-    streaming-alpha path: a still-running ADMM driver hands its live
-    ``AdmmState.alpha`` here every few chunks and publishes the result
-    (``repro.serve.publisher.ModelHandle``) without ever re-forming the
-    training Gram.
+def _pool_alpha(alpha: Union[jax.Array, Sequence[jax.Array]],
+                l_full: int) -> jax.Array:
+    """Normalize any live dual solution to pooled (L, C) float32.
 
-    The support set, bandwidth and kernel spec are reused as-is; the
-    centering terms (row_mean_coef, bias) are recomputed from the CACHED
-    kernel mean statistics (``k_row_mean``/``k_grand_mean``, recorded at
-    fit time by ``from_dual(center=True)``) — an O(L*C) update instead of
-    the O(L^2) Gram pass.
-
-    Args:
-      model: centered fit carrying its kernel-mean cache (or an uncentered
-        fit, for which the centering terms stay zero). Compressed models
-        lost the support-set/coefficient correspondence and are rejected.
-      alpha: the new dual solution — (L,) / (L, C) on the pooled support
-        set, a node-major (J, N) / (J, N, C) live solver state, or a list
-        of (J, N) per-component solutions; node-major input is pooled
-        exactly like ``from_decentralized`` (concat / J).
-
-    Returns:
-      A new ``FittedKpca`` (the input model is unchanged).
+    Accepts (L,) / (L, C) pooled coefficients, node-major (J, N[, C]) live
+    solver state, or a list of per-component (J, N) solutions; node-major
+    input is pooled exactly like ``from_decentralized`` (concat / J).
     """
-    if not isinstance(model, FittedKpca):
-        raise TypeError(
-            f"refresh_coefficients takes a FittedKpca, got "
-            f"{type(model).__name__}; per-shard refresh of a sharded "
-            f"model is a ROADMAP follow-up")
-    l_full = model.n_support
     if isinstance(alpha, (list, tuple)):
         first = jnp.asarray(alpha[0])
         j = first.shape[0] if first.ndim == 2 else 1
@@ -240,7 +215,49 @@ def refresh_coefficients(model: FittedKpca,
             f"alpha with leading dim {alpha.shape[0]} does not match "
             f"the support set ({l_full} rows); compressed models "
             f"cannot be refreshed — refit and re-compress instead")
-    alpha = _as_2d(alpha).astype(jnp.float32) / j
+    return _as_2d(alpha).astype(jnp.float32) / j
+
+
+def refresh_coefficients(model: Union[FittedKpca, "ShardedFittedKpca"],
+                         alpha: Union[jax.Array, Sequence[jax.Array]]
+                         ) -> Union[FittedKpca, "ShardedFittedKpca"]:
+    """Rebuild a fitted model around NEW dual coefficients — the
+    streaming-alpha path: a still-running ADMM driver hands its live
+    ``AdmmState.alpha`` here every few chunks and publishes the result
+    (``repro.serve.publisher.ModelHandle``) without ever re-forming the
+    training Gram.
+
+    The support set, bandwidth and kernel spec are reused as-is; the
+    centering terms (row_mean_coef, bias) are recomputed from the CACHED
+    kernel mean statistics (``k_row_mean``/``k_grand_mean``, recorded at
+    fit time by ``from_dual(center=True)``) — an O(L*C) update instead of
+    the O(L^2) Gram pass. A ``ShardedFittedKpca`` refreshes the same way
+    per shard: each shard's coefficient rows are swapped against its own
+    cached kernel-mean slice and the GLOBAL centering terms are rebuilt
+    from the per-shard partial sums (see also
+    ``refresh_shard_coefficients`` for swapping a single shard).
+
+    Args:
+      model: centered fit carrying its kernel-mean cache (or an uncentered
+        fit, for which the centering terms stay zero). Compressed models
+        lost the support-set/coefficient correspondence and are rejected.
+      alpha: the new dual solution — (L,) / (L, C) on the pooled support
+        set (sharded models: shard-concatenation order, which IS the
+        pooled order for ``shard_fitted`` models), a node-major (J, N) /
+        (J, N, C) live solver state, or a list of (J, N) per-component
+        solutions; node-major input is pooled exactly like
+        ``from_decentralized`` (concat / J).
+
+    Returns:
+      A new model of the same type (the input model is unchanged).
+    """
+    if isinstance(model, ShardedFittedKpca):
+        return _refresh_sharded(model, alpha)
+    if not isinstance(model, FittedKpca):
+        raise TypeError(
+            f"refresh_coefficients takes a FittedKpca or "
+            f"ShardedFittedKpca, got {type(model).__name__}")
+    alpha = _pool_alpha(alpha, model.n_support)
     c = alpha.shape[1]
 
     if model.k_row_mean is not None:
@@ -401,6 +418,13 @@ class ShardedFittedKpca:
     n_support:     total TRUE support rows across shards (static; the 1/L
                    of the row-mean term).
     shard_sizes:   per-shard true row counts (static).
+    k_row_mean:    optional (S, Lp) per-shard slices of the cached kernel
+                   mean statistics m_i (zero on padding rows) — lets each
+                   shard's coefficients refresh independently
+                   (``refresh_coefficients``/``refresh_shard_coefficients``)
+                   without re-forming any Gram (None for compressed or
+                   uncentered models).
+    k_grand_mean:  optional () cached grand mean mu_bar (same caveat).
     spec:          kernel spec (static pytree metadata).
     """
 
@@ -411,6 +435,8 @@ class ShardedFittedKpca:
     gamma: jax.Array
     n_support: int
     shard_sizes: Tuple[int, ...]
+    k_row_mean: Optional[jax.Array] = None
+    k_grand_mean: Optional[jax.Array] = None
     spec: KernelSpec = KernelSpec()
 
     @property
@@ -431,14 +457,16 @@ class ShardedFittedKpca:
 
 
 def _flatten_sharded(m: ShardedFittedKpca):
-    return ((m.x_support, m.coefs_ext, m.row_mean_coef, m.bias, m.gamma),
+    return ((m.x_support, m.coefs_ext, m.row_mean_coef, m.bias, m.gamma,
+             m.k_row_mean, m.k_grand_mean),
             (m.n_support, m.shard_sizes, m.spec))
 
 
 def _unflatten_sharded(aux, leaves):
     n_support, shard_sizes, spec = aux
-    return ShardedFittedKpca(*leaves, n_support=n_support,
-                             shard_sizes=shard_sizes, spec=spec)
+    return ShardedFittedKpca(*leaves[:5], n_support=n_support,
+                             shard_sizes=shard_sizes, k_row_mean=leaves[5],
+                             k_grand_mean=leaves[6], spec=spec)
 
 
 jax.tree_util.register_pytree_node(ShardedFittedKpca, _flatten_sharded,
@@ -540,12 +568,114 @@ def shard_fitted(model: FittedKpca, n_shards: int,
         xs[j, :sizes[j]] = xj
         ae[j, :sizes[j], :c] = aj
         ae[j, :sizes[j], c] = 1.0                        # indicator column
+    # Carry the kernel-mean cache per shard (zero on padding rows) so each
+    # shard's coefficients can refresh independently; compression breaks
+    # the support/coefficient correspondence, so the cache is dropped.
+    stats = {}
+    if landmarks_per_shard is None and model.k_row_mean is not None:
+        kr = np.zeros((n_shards, lp), np.float32)
+        m_full = np.asarray(model.k_row_mean, np.float32)
+        for j, ix in enumerate(splits):
+            kr[j, :sizes[j]] = m_full[ix]
+        stats = dict(k_row_mean=jnp.asarray(kr),
+                     k_grand_mean=model.k_grand_mean)
     return ShardedFittedKpca(
         x_support=jnp.asarray(xs), coefs_ext=jnp.asarray(ae),
         row_mean_coef=jnp.asarray(row_mean_coef, jnp.float32),
         bias=jnp.asarray(bias, jnp.float32), gamma=model.gamma,
         n_support=int(sum(sizes)), shard_sizes=sizes,
-        spec=model.spec), rel_err
+        spec=model.spec, **stats), rel_err
+
+
+def _sharded_centering(model: ShardedFittedKpca, coefs_pad: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Global (row_mean_coef, bias) for new per-shard padded (S, Lp, C)
+    coefficients, from the per-shard cached kernel-mean slices. Padding
+    rows are zero in both the coefficients and the cache, so plain sums
+    over (S, Lp) ARE the true-row sums."""
+    alpha_sum = jnp.sum(coefs_pad, axis=(0, 1))          # (C,)
+    m_dot = jnp.einsum("sl,slc->c", model.k_row_mean, coefs_pad)
+    return -alpha_sum, model.k_grand_mean * alpha_sum - m_dot
+
+
+def _require_sharded_cache(model: ShardedFittedKpca, c: int
+                           ) -> Tuple[jax.Array, jax.Array, bool]:
+    """(row_mean_coef, bias, centered) guard shared by the sharded refresh
+    paths: with no cache, only an UNCENTERED model (all-zero centering
+    terms) may refresh — its terms stay zero."""
+    if model.k_row_mean is not None:
+        return None, None, True
+    if bool(np.any(np.asarray(model.row_mean_coef))) or \
+            bool(np.any(np.asarray(model.bias))):
+        raise ValueError(
+            "sharded model carries centering terms but no per-shard "
+            "kernel-mean cache (k_row_mean/k_grand_mean) — re-shard an "
+            "uncompressed centered fit to enable coefficient refresh")
+    return (jnp.zeros((c,), jnp.float32), jnp.zeros((c,), jnp.float32),
+            False)
+
+
+def _refresh_sharded(model: ShardedFittedKpca,
+                     alpha: Union[jax.Array, Sequence[jax.Array]]
+                     ) -> ShardedFittedKpca:
+    """All-shard coefficient swap (see ``refresh_coefficients``)."""
+    alpha = _pool_alpha(alpha, model.n_support)          # (L, C)
+    c = alpha.shape[1]
+    lp = model.shard_capacity
+    rows, off = [], 0
+    for n in model.shard_sizes:
+        rows.append(jnp.pad(alpha[off:off + n], ((0, lp - n), (0, 0))))
+        off += n
+    coefs_pad = jnp.stack(rows)                          # (S, Lp, C)
+    row_mean_coef, bias, centered = _require_sharded_cache(model, c)
+    if centered:
+        row_mean_coef, bias = _sharded_centering(model, coefs_pad)
+    coefs_ext = jnp.concatenate(
+        [coefs_pad, model.coefs_ext[..., -1:]], axis=-1)
+    return dataclasses.replace(model, coefs_ext=coefs_ext,
+                               row_mean_coef=row_mean_coef, bias=bias)
+
+
+def refresh_shard_coefficients(model: ShardedFittedKpca, shard: int,
+                               alpha: jax.Array) -> ShardedFittedKpca:
+    """Swap ONE shard's dual-coefficient rows; all other shards keep
+    theirs. The global centering terms are rebuilt from the per-shard
+    cached kernel-mean slices — an O(S*Lp*C) update with no Gram contact —
+    so the result is exactly ``refresh_coefficients`` with the other
+    shards' current coefficients left in place. The returned model is a
+    complete new artifact: publishing it through a ``ModelHandle`` is one
+    atomic swap, so no request can observe a mix of shard versions.
+
+    Args:
+      model: uncompressed sharded artifact carrying its per-shard cache
+        (or an uncentered one, whose centering terms stay zero).
+      shard: shard index in [0, model.n_shards).
+      alpha: (n_j,) or (n_j, C) new coefficients for that shard's TRUE
+        rows, n_j = model.shard_sizes[shard]; C must match the model (the
+        other shards' column count is fixed).
+
+    Returns:
+      A new ``ShardedFittedKpca`` (the input model is unchanged).
+    """
+    if not isinstance(model, ShardedFittedKpca):
+        raise TypeError(f"refresh_shard_coefficients takes a "
+                        f"ShardedFittedKpca, got {type(model).__name__}")
+    if not 0 <= shard < model.n_shards:
+        raise ValueError(
+            f"shard {shard} not in [0, {model.n_shards})")
+    n_j, c = model.shard_sizes[shard], model.n_components
+    alpha = _as_2d(jnp.asarray(alpha)).astype(jnp.float32)
+    if alpha.shape != (n_j, c):
+        raise ValueError(
+            f"shard {shard} takes ({n_j}, {c}) coefficients, "
+            f"got {alpha.shape}")
+    rows = jnp.pad(alpha, ((0, model.shard_capacity - n_j), (0, 0)))
+    coefs_ext = model.coefs_ext.at[shard, :, :c].set(rows)
+    row_mean_coef, bias, centered = _require_sharded_cache(model, c)
+    if centered:
+        row_mean_coef, bias = _sharded_centering(model, coefs_ext[..., :c])
+    return dataclasses.replace(model, coefs_ext=coefs_ext,
+                               row_mean_coef=row_mean_coef, bias=bias)
 
 
 def gather_fitted(sharded: ShardedFittedKpca) -> FittedKpca:
@@ -562,9 +692,16 @@ def gather_fitted(sharded: ShardedFittedKpca) -> FittedKpca:
     coefs = jnp.concatenate(
         [sharded.coefs_ext[j, :n, :-1]
          for j, n in enumerate(sharded.shard_sizes)], axis=0)
+    stats = {}
+    if sharded.k_row_mean is not None:
+        stats = dict(
+            k_row_mean=jnp.concatenate(
+                [sharded.k_row_mean[j, :n]
+                 for j, n in enumerate(sharded.shard_sizes)]),
+            k_grand_mean=sharded.k_grand_mean)
     return FittedKpca(x_support=xs, coefs=coefs,
                       row_mean_coef=sharded.row_mean_coef, bias=sharded.bias,
-                      gamma=sharded.gamma, spec=sharded.spec)
+                      gamma=sharded.gamma, spec=sharded.spec, **stats)
 
 
 # ---- persistence (repro.checkpoint layout) --------------------------------
@@ -608,6 +745,9 @@ def save_sharded(ckpt_dir: str, model: ShardedFittedKpca) -> str:
     tree = {"x_support": model.x_support, "coefs_ext": model.coefs_ext,
             "row_mean_coef": model.row_mean_coef, "bias": model.bias,
             "gamma": model.gamma}
+    if model.k_row_mean is not None:
+        tree["k_row_mean"] = model.k_row_mean
+        tree["k_grand_mean"] = model.k_grand_mean
     meta = {"kind": "sharded_fitted_kpca",
             "spec": dataclasses.asdict(model.spec),
             "n_support": model.n_support,
@@ -631,6 +771,8 @@ def load_sharded(ckpt_dir: str) -> ShardedFittedKpca:
         row_mean_coef=tree["row_mean_coef"], bias=tree["bias"],
         gamma=tree["gamma"], n_support=int(meta["n_support"]),
         shard_sizes=tuple(int(s) for s in meta["shard_sizes"]),
+        k_row_mean=tree.get("k_row_mean"),
+        k_grand_mean=tree.get("k_grand_mean"),
         spec=KernelSpec(**meta["spec"]))
 
 
@@ -638,6 +780,7 @@ __all__ = [
     "FittedKpca", "ShardedFittedKpca", "compress", "effective_coefs",
     "finalize_partial_scores", "fit_central", "from_dual",
     "from_decentralized", "gather_fitted", "landmark_schedule", "load_fitted",
-    "load_sharded", "project", "refresh_coefficients", "save_fitted",
-    "save_sharded", "shard_fitted",
+    "load_sharded", "project", "refresh_coefficients",
+    "refresh_shard_coefficients", "save_fitted", "save_sharded",
+    "shard_fitted",
 ]

@@ -308,6 +308,79 @@ class ChunkResult:
     stopped: bool = False          # residual-based early stop fired here
 
 
+# ---- refresh cadence policies ---------------------------------------------
+#
+# The serving side republishes a refreshed model from the driver's live
+# state (``repro.serve.publisher.stream_chunks``). How often is a policy on
+# the DRIVER's chunk stream: any object with ``should_refresh(ChunkResult)
+# -> bool``, consulted once per chunk (the final chunk always publishes so
+# the served model never lags the finished fit).
+
+class EveryK:
+    """Fixed cadence: fire on every k-th chunk."""
+
+    def __init__(self, k: int = 1):
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.k = k
+        self._n = 0
+
+    def should_refresh(self, chunk: "ChunkResult") -> bool:
+        self._n += 1
+        return self._n % self.k == 0
+
+
+class ResidualImprovement:
+    """Residual-driven cadence: fire only when the primal residual has
+    IMPROVED by at least ``rel_drop`` (fractional) since the last firing.
+
+    The serving analogue of COKE's communication censoring: a refresh that
+    barely moves the iterate is not worth a publish, while a plateau-then-
+    drop (e.g. after a rho switch) publishes immediately. The first chunk
+    always fires (there is no baseline yet), so a freshly started stream
+    serves real coefficients as soon as possible.
+    """
+
+    def __init__(self, rel_drop: float = 0.1):
+        if not 0.0 <= rel_drop < 1.0:
+            raise ValueError(f"rel_drop must be in [0, 1), got {rel_drop}")
+        self.rel_drop = rel_drop
+        self._last: Optional[float] = None
+
+    def should_refresh(self, chunk: "ChunkResult") -> bool:
+        res = float(chunk.primal_residual[-1])
+        if self._last is None or res <= (1.0 - self.rel_drop) * self._last:
+            self._last = res
+            return True
+        return False
+
+
+def resolve_refresh_policy(policy) -> object:
+    """Normalize a refresh-cadence spec to a policy object.
+
+    Accepts an int (every k chunks), the string "residual"
+    (``ResidualImprovement`` defaults), any object already exposing
+    ``should_refresh``, a bare ``ChunkResult -> bool`` callable, or None
+    (every chunk).
+    """
+    if policy is None:
+        return EveryK(1)
+    if isinstance(policy, int):
+        return EveryK(policy)
+    if isinstance(policy, str):
+        if policy != "residual":
+            raise ValueError(f"unknown refresh policy {policy!r}")
+        return ResidualImprovement()
+    if hasattr(policy, "should_refresh"):
+        return policy
+    if callable(policy):
+        class _Fn:
+            def should_refresh(self, chunk, _fn=policy):
+                return bool(_fn(chunk))
+        return _Fn()
+    raise TypeError(f"cannot interpret refresh policy {policy!r}")
+
+
 def _slot_rho_dense(mask: jax.Array, rho1, rho2) -> jax.Array:
     """(J, S) per-slot rho from a (J, S) float mask."""
     j, s = mask.shape
@@ -461,7 +534,8 @@ def load_state(ckpt_dir: str, step: Optional[int] = None) -> AdmmState:
 
 
 __all__ = [
-    "AdmmState", "ChunkResult", "DenseComm", "RingComm", "SolverOps",
-    "admm_step", "dense_parts", "init_state", "lagrangian", "load_state",
-    "resolve_rho2", "run_chunked", "save_state",
+    "AdmmState", "ChunkResult", "DenseComm", "EveryK", "ResidualImprovement",
+    "RingComm", "SolverOps", "admm_step", "dense_parts", "init_state",
+    "lagrangian", "load_state", "resolve_refresh_policy", "resolve_rho2",
+    "run_chunked", "save_state",
 ]

@@ -1,0 +1,35 @@
+"""Shared helpers for the Pallas kernel wrappers.
+
+Every ``ops.py`` wrapper (gram, centering, project, admm_step) needs the
+same three pieces of plumbing: backend detection for interpret-mode
+dispatch, zero-padding operands to block multiples, and rounding block
+sizes. They live here so the wrappers do not reach into each other's
+modules for private helpers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(a: jax.Array, mult: int, axis: int) -> jax.Array:
+    """Zero-pad ``a`` along ``axis`` up to the next multiple of ``mult``."""
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+__all__ = ["_on_tpu", "_pad_to", "_round_up"]

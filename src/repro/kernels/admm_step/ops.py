@@ -4,7 +4,7 @@ from __future__ import annotations
 
 from typing import Optional
 
-from ..gram.ops import _on_tpu
+from .._util import _on_tpu
 from .admm_step import admm_local_update
 
 

@@ -7,7 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..gram.ops import _on_tpu, _pad_to, _round_up
+from .._util import _on_tpu, _pad_to, _round_up
 from .centering import center_tiles
 
 

@@ -13,21 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.kernels_math import KernelSpec, resolve_gamma, _self_k
+from .._util import _on_tpu, _pad_to, _round_up
 from .gram import gram_tiles
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pad_to(a: jax.Array, mult: int, axis: int) -> jax.Array:
-    size = a.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return a
-    widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(a, widths)
 
 
 def gram_op(spec: KernelSpec, x: jax.Array, y: Optional[jax.Array] = None,
@@ -65,7 +52,3 @@ def gram_op(spec: KernelSpec, x: jax.Array, y: Optional[jax.Array] = None,
                      scale=spec.scale, normalize=spec.normalize,
                      block_n=bn, block_k=bk, block_m=bm, interpret=interpret)
     return out[:n, :k]
-
-
-def _round_up(v: int, m: int) -> int:
-    return ((v + m - 1) // m) * m

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.kernels_math import KernelSpec, resolve_gamma, _self_k
-from ..gram.ops import _on_tpu, _pad_to, _round_up
+from .._util import _on_tpu, _pad_to, _round_up
 from .project import project_tiles
 
 

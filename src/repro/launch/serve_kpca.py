@@ -1,0 +1,106 @@
+"""Async kPCA serving launcher: concurrent submitters against the
+futures-based engine, with optional admission control.
+
+    PYTHONPATH=src python -m repro.launch.serve_kpca --smoke
+    PYTHONPATH=src python -m repro.launch.serve_kpca \
+        --n-train 512 --submitters 4 --requests 64 --queue-factor 2
+
+Fits a synthetic model, starts the background flusher, then hammers
+``submit`` from several threads and reports throughput, batching
+efficiency, queue waits, and (with --queue-factor) how many requests
+admission control refused.
+"""
+
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import oos
+from ..core.kernels_math import KernelSpec
+from ..data import kpca_dataset
+from ..serve import KpcaEngine, KpcaServeConfig, QueueFullError
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny dims for a fast sanity run")
+    ap.add_argument("--n-train", type=int, default=512)
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--components", type=int, default=2)
+    ap.add_argument("--max-batch", type=int, default=128)
+    ap.add_argument("--submitters", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=64,
+                    help="requests per submitter thread")
+    ap.add_argument("--max-q", type=int, default=32,
+                    help="max rows per request (sizes are uniform 1..max-q)")
+    ap.add_argument("--queue-factor", type=int, default=None,
+                    help="admission bound = max_batch * k rows (None: off)")
+    ap.add_argument("--admission", default="reject",
+                    choices=["reject", "shed"])
+    ap.add_argument("--flush-wait-ms", type=float, default=2.0)
+    args = ap.parse_args()
+    if args.smoke:
+        args.n_train, args.m, args.requests = 128, 16, 16
+
+    x = jnp.asarray(kpca_dataset(args.n_train, m=args.m, seed=0))
+    model = oos.fit_central(x, KernelSpec(kind="rbf"),
+                            n_components=args.components, center=True)
+    cfg = KpcaServeConfig(max_batch=args.max_batch,
+                          queue_factor=args.queue_factor,
+                          admission=args.admission,
+                          flush_max_wait_s=args.flush_wait_ms / 1e3)
+    eng = KpcaEngine(model, cfg)
+    for b in cfg.buckets():                        # warm every bucket
+        eng.project_many([np.zeros((b, args.m), np.float32)])
+    eng.stats = type(eng.stats)()
+
+    rejected = [0] * args.submitters
+    futures = [[] for _ in range(args.submitters)]
+
+    def submitter(tid: int):
+        rng = np.random.default_rng(tid)
+        for _ in range(args.requests):
+            q = int(rng.integers(1, args.max_q + 1))
+            xq = rng.normal(size=(q, args.m)).astype(np.float32)
+            try:
+                futures[tid].append(eng.submit(xq))
+            except QueueFullError:
+                rejected[tid] += 1
+
+    t0 = time.perf_counter()
+    with eng:                                      # flusher thread runs here
+        threads = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(args.submitters)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        done = [f.result(timeout=60.0) for fs in futures for f in fs]
+    dt = time.perf_counter() - t0
+
+    st = eng.stats
+    p50, p99 = st.latency_percentiles()
+    waits = [r.queue_wait_s for r in st.per_request] or [0.0]
+    print(f"served {st.n_queries} queries / {st.n_requests} requests "
+          f"({len(done)} futures) in {dt:.2f}s "
+          f"-> {st.n_queries / max(dt, 1e-9):.0f} q/s wall")
+    print(f"flushes={st.n_flushes} compiles={st.n_compiles} "
+          f"pad_rows={st.n_padded} "
+          f"pad_frac={st.n_padded / max(st.n_queries + st.n_padded, 1):.2f}")
+    print(f"compute p50={p50 * 1e3:.2f}ms p99={p99 * 1e3:.2f}ms  "
+          f"queue-wait p50={np.percentile(waits, 50) * 1e3:.2f}ms "
+          f"p99={np.percentile(waits, 99) * 1e3:.2f}ms")
+    if args.queue_factor is not None:
+        print(f"admission: bound={cfg.queue_capacity()} rows "
+              f"policy={args.admission} rejected={sum(rejected)} "
+              f"shed={st.n_shed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,11 @@
+from .batching import (EngineStats, QueueFullError, RequestFuture,
+                       RequestQueue, RequestStats, ShedError)
 from .engine import DecodeEngine, ServeConfig
-from .kpca_engine import (EngineStats, KpcaEngine, KpcaServeConfig,
-                          RequestStats)
-from .publisher import ModelHandle, stream_chunks
+from .kpca_engine import KpcaEngine, KpcaServeConfig
+from .publisher import BackgroundPublisher, ModelHandle, stream_chunks
 from .sharded import project_sharded
 
-__all__ = ["DecodeEngine", "EngineStats", "KpcaEngine", "KpcaServeConfig",
-           "ModelHandle", "RequestStats", "ServeConfig", "project_sharded",
-           "stream_chunks"]
+__all__ = ["BackgroundPublisher", "DecodeEngine", "EngineStats",
+           "KpcaEngine", "KpcaServeConfig", "ModelHandle", "QueueFullError",
+           "RequestFuture", "RequestQueue", "RequestStats", "ServeConfig",
+           "ShedError", "project_sharded", "stream_chunks"]

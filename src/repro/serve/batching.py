@@ -1,0 +1,303 @@
+"""Shared request batching/queueing layer for the serving engines.
+
+``DecodeEngine`` (token slots) and ``KpcaEngine`` (projection slabs) shape
+traffic the same way: variable-size requests go into a FIFO queue, a
+drainer packs them into fixed-shape device batches, and per-request
+accounting rides along. This module owns that machinery once:
+
+  * ``RequestQueue`` — thread-safe FIFO of ``Request`` entries with an
+    optional admission bound: when the queued work exceeds ``max_queries``
+    the queue either REJECTS the new request (``QueueFullError``) or SHEDS
+    the oldest queued ones (their futures fail) to admit it. A condition
+    variable lets a background drainer sleep until a size-or-deadline
+    trigger fires (``wait_for_work``).
+  * ``RequestFuture`` — a ``concurrent.futures.Future`` carrying the
+    request id/size, the handle ``submit()`` returns in the async API.
+  * pow2 shape buckets (``pow2_buckets``/``bucket_for``) and slab packing
+    (``iter_slabs`` head-to-tail rows for kPCA, ``left_pad_pack`` padded
+    token waves for decode) — the fixed set of compiled shapes that keeps
+    any request mix recompile-free in steady state.
+  * per-request accounting (``RequestStats``/``EngineStats``).
+
+Everything here is engine-agnostic: payloads are opaque, only their row
+count ``n`` matters to the queue and the packers.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import threading
+import time
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---- accounting -----------------------------------------------------------
+
+@dataclasses.dataclass
+class RequestStats:
+    request_id: int
+    n_queries: int
+    latency_s: float              # wall time inside the engine for this req
+    model_version: int = 0        # handle version this request was served at
+    queue_wait_s: float = 0.0     # submit -> start-of-serve wait (async path)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n_requests: int = 0
+    n_queries: int = 0
+    n_padded: int = 0             # wasted pad rows actually computed
+    n_compiles: int = 0           # distinct (bucket) programs built
+    n_rejected: int = 0           # admissions refused (QueueFullError)
+    n_shed: int = 0               # queued requests dropped to admit newer
+    n_flushes: int = 0            # drain cycles that served >= 1 request
+    total_time_s: float = 0.0
+    per_request: List[RequestStats] = dataclasses.field(default_factory=list)
+
+    @property
+    def queries_per_s(self) -> float:
+        return self.n_queries / self.total_time_s if self.total_time_s else 0.0
+
+    def latency_percentiles(self, qs=(50, 99)) -> Tuple[float, ...]:
+        """Per-request latency percentiles in seconds, one per entry of
+        ``qs`` (default p50/p99); (0.0, ...) before any request is served."""
+        lat = [r.latency_s for r in self.per_request] or [0.0]
+        return tuple(float(np.percentile(lat, q)) for q in qs)
+
+
+# ---- queue ----------------------------------------------------------------
+
+class QueueFullError(RuntimeError):
+    """Admission control refused a request (queue at capacity)."""
+
+
+class ShedError(RuntimeError):
+    """This queued request was shed to admit a newer one."""
+
+
+class RequestFuture(concurrent.futures.Future):
+    """Future for one request's result, tagged with its queue identity."""
+
+    def __init__(self, request_id: int, n: int):
+        super().__init__()
+        self.request_id = request_id
+        self.n = n
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued request: opaque payload + its row count and future."""
+
+    rid: int
+    payload: Any
+    n: int
+    future: RequestFuture
+    t_submit: float
+
+
+class RequestQueue:
+    """Thread-safe bounded FIFO with admission control and a drain trigger.
+
+    ``max_queries`` bounds the total queued row count (None = unbounded).
+    ``policy`` picks what happens when an admission would exceed it:
+    "reject" raises ``QueueFullError`` at ``put``; "shed" drops the OLDEST
+    queued requests (failing their futures with ``ShedError``) until the
+    new one fits — latency-loving head drop, matching LM-serving practice
+    where a stale queued request is worth less than a fresh one. A request
+    larger than the whole capacity is always rejected.
+    """
+
+    def __init__(self, max_queries: Optional[int] = None,
+                 policy: str = "reject"):
+        if policy not in ("reject", "shed"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        if max_queries is not None and max_queries < 1:
+            raise ValueError(f"max_queries must be >= 1, got {max_queries}")
+        self.max_queries = max_queries
+        self.policy = policy
+        self._cond = threading.Condition()
+        self._entries: List[Request] = []
+        self._depth = 0               # queued rows
+        self._next_id = 0
+        self.n_rejected = 0
+        self.n_shed = 0
+        self.depth_peak = 0
+
+    # -- producer side ------------------------------------------------------
+
+    def put(self, payload: Any, n: int) -> Tuple[RequestFuture,
+                                                 List[RequestFuture]]:
+        """Enqueue one request of ``n`` rows.
+
+        Returns (future, shed) where ``shed`` lists the futures of any
+        requests dropped to admit this one (empty unless policy="shed").
+        Raises ``QueueFullError`` when the request cannot be admitted.
+        """
+        with self._cond:
+            shed: List[RequestFuture] = []
+            if self.max_queries is not None and \
+                    self._depth + n > self.max_queries:
+                if n > self.max_queries or self.policy == "reject":
+                    self.n_rejected += 1
+                    raise QueueFullError(
+                        f"queue at capacity ({self._depth}/"
+                        f"{self.max_queries} rows queued, request adds {n})")
+                while self._entries and self._depth + n > self.max_queries:
+                    old = self._entries.pop(0)
+                    self._depth -= old.n
+                    self.n_shed += 1
+                    shed.append(old.future)
+            rid = self._next_id
+            self._next_id += 1
+            fut = RequestFuture(rid, n)
+            self._entries.append(
+                Request(rid, payload, n, fut, time.monotonic()))
+            self._depth += n
+            self.depth_peak = max(self.depth_peak, self._depth)
+            self._cond.notify_all()
+        for f in shed:
+            f.set_exception(ShedError("shed by admission control"))
+        return fut, shed
+
+    # -- consumer side ------------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        """Queued rows (not requests)."""
+        with self._cond:
+            return self._depth
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._entries)
+
+    def drain(self) -> List[Request]:
+        """Atomically take everything queued (FIFO order)."""
+        with self._cond:
+            out, self._entries = self._entries, []
+            self._depth = 0
+            return out
+
+    def take(self, n_requests: int) -> List[Request]:
+        """Atomically take up to ``n_requests`` entries from the head."""
+        with self._cond:
+            out = self._entries[:n_requests]
+            self._entries = self._entries[n_requests:]
+            for e in out:
+                self._depth -= e.n
+            return out
+
+    def restore(self, entries: Sequence[Request]) -> None:
+        """Put drained entries back at the FRONT (failed-flush retry)."""
+        with self._cond:
+            self._entries = list(entries) + self._entries
+            self._depth += sum(e.n for e in entries)
+            self._cond.notify_all()
+
+    def kick(self) -> None:
+        """Wake any ``wait_for_work`` sleeper (e.g. on engine shutdown)."""
+        with self._cond:
+            self._cond.notify_all()
+
+    def wait_for_work(self, min_queries: int, max_wait_s: float,
+                      stop: threading.Event) -> bool:
+        """Sleep until a flush trigger fires: queued rows reach
+        ``min_queries``, OR the oldest entry has waited ``max_wait_s``
+        since submit, OR ``stop`` is set. Returns True when there is
+        anything queued (the caller should drain), False otherwise.
+        """
+        with self._cond:
+            while not stop.is_set():
+                if self._entries:
+                    if self._depth >= min_queries:
+                        return True
+                    age = time.monotonic() - self._entries[0].t_submit
+                    if age >= max_wait_s:
+                        return True
+                    self._cond.wait(timeout=max_wait_s - age)
+                else:
+                    self._cond.wait(timeout=0.1)
+            return bool(self._entries)
+
+
+# ---- shape buckets --------------------------------------------------------
+
+def pow2_buckets(min_bucket: int, max_batch: int) -> List[int]:
+    """Power-of-two widths: min_bucket, 2*min_bucket, ..., max_batch."""
+    if not 0 < min_bucket <= max_batch:
+        raise ValueError(f"need 0 < min_bucket <= max_batch, got "
+                         f"min_bucket={min_bucket} max_batch={max_batch}")
+    out, b = [], min_bucket
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return out
+
+
+def bucket_for(buckets: Sequence[int], size: int) -> int:
+    """Smallest bucket holding ``size`` rows (widest bucket for overflow —
+    callers split anything larger across multiple slabs)."""
+    for b in buckets:
+        if size <= b:
+            return b
+    return buckets[-1]
+
+
+# ---- slab packing ---------------------------------------------------------
+
+def iter_slabs(entries: Sequence[Request], max_batch: int,
+               buckets: Sequence[int]):
+    """Head-to-tail pack 2-D float payloads into pow2-bucketed slabs.
+
+    Concatenates every entry's ``payload`` rows into one flat stream and
+    yields ``(slab, take, owners)`` per device batch: ``slab`` is a
+    (bucket, M) float32 array whose first ``take`` rows are real,
+    ``owners`` maps each real row back to its request id. Row-wise kernel
+    math makes valid rows independent of the zero padding, so per-request
+    results are exactly the unbatched ones.
+    """
+    if not entries:
+        return
+    stream = np.concatenate([e.payload for e in entries], axis=0)
+    owners = np.concatenate(
+        [np.full(e.n, e.rid, np.int64) for e in entries])
+    pos = 0
+    while pos < stream.shape[0]:
+        take = min(max_batch, stream.shape[0] - pos)
+        bucket = bucket_for(buckets, take)
+        slab = np.zeros((bucket, stream.shape[1]), np.float32)
+        slab[:take] = stream[pos:pos + take]
+        yield slab, take, owners[pos:pos + take]
+        pos += take
+
+
+def left_pad_pack(prompts: Sequence[Sequence[int]], slots: int,
+                  pad_id: int = 0) -> Tuple[np.ndarray, int]:
+    """Pack up to ``slots`` token prompts into one LEFT-padded int32 wave.
+
+    Returns (toks, plen): toks is (slots, plen) with prompt i right-aligned
+    in row i (rows beyond len(prompts) stay all-pad), plen the longest
+    prompt. Left padding keeps the last prompt token in the last column, so
+    one uniform-length prefill position works for the whole wave.
+    """
+    if not prompts:
+        raise ValueError("left_pad_pack needs at least one prompt")
+    if len(prompts) > slots:
+        raise ValueError(f"{len(prompts)} prompts > {slots} slots")
+    plen = max(len(p) for p in prompts)
+    toks = np.full((slots, plen), pad_id, np.int32)
+    for i, prompt in enumerate(prompts):
+        if len(prompt):
+            toks[i, plen - len(prompt):] = prompt
+    return toks, plen
+
+
+__all__ = [
+    "EngineStats", "QueueFullError", "Request", "RequestFuture",
+    "RequestQueue", "RequestStats", "ShedError", "bucket_for", "iter_slabs",
+    "left_pad_pack", "pow2_buckets",
+]

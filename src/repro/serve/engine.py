@@ -3,16 +3,21 @@
 A fixed number of slots share one KV cache; finished sequences are replaced
 from the queue without recompiling (cache_len is per-engine uniform for the
 compiled step — slot-level positions are tracked with masks). Greedy or
-temperature sampling."""
+temperature sampling. The prompt queue and wave packing come from the
+shared batching layer (``repro.serve.batching``): prompts flow through a
+``RequestQueue`` and are packed per wave with ``left_pad_pack``, the same
+machinery the kPCA projection engine builds its async pipeline on."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .batching import RequestQueue, left_pad_pack
 
 
 @dataclasses.dataclass
@@ -47,40 +52,28 @@ class DecodeEngine:
         """Serve all prompts with continuous slot reuse; returns generated
         token lists (prompt excluded)."""
         cfg = self.cfg
-        queue = list(enumerate(prompts))
-        results: dict = {}
-        active: List[Optional[int]] = [None] * self.slots
+        queue = RequestQueue()
+        futs = [queue.put(p, n=len(p))[0] for p in prompts]
 
         # uniform-length prefill per wave (pad prompts to the same length)
-        while queue or any(a is not None for a in active):
-            wave = []
-            while queue and len(wave) < self.slots:
-                wave.append(queue.pop(0))
-            if not wave:
-                break
-            plen = max(len(p) for _, p in wave)
-            toks = np.zeros((self.slots, plen), np.int32)
-            for i, (pid, prompt) in enumerate(wave):
-                toks[i, plen - len(prompt):] = prompt  # left-pad
-                active[i] = pid
-                results[pid] = []
+        while len(queue):
+            wave = queue.take(self.slots)
+            toks, plen = left_pad_pack([e.payload for e in wave], self.slots)
+            results = [[] for _ in wave]
             cache = self.model.init_cache(self.slots, cfg.max_len)
             logits, cache = self._step(self.params, cache,
                                        jnp.asarray(toks),
                                        jnp.asarray(0, jnp.int32))
             cache_len = plen
             nxt = self._sample(np.asarray(logits, np.float32))
-            done = [False] * self.slots
+            done = [False] * len(wave)
             for t in range(cfg.max_new_tokens):
-                for i in range(self.slots):
-                    if active[i] is not None and not done[i]:
-                        results[active[i]].append(int(nxt[i]))
+                for i in range(len(wave)):
+                    if not done[i]:
+                        results[i].append(int(nxt[i]))
                         if int(nxt[i]) == cfg.eos_id:
                             done[i] = True
-                if all(done[i] or active[i] is None
-                       for i in range(self.slots)):
-                    break
-                if cache_len + 1 >= cfg.max_len:
+                if all(done) or cache_len + 1 >= cfg.max_len:
                     break
                 logits, cache = self._step(
                     self.params, cache,
@@ -88,5 +81,6 @@ class DecodeEngine:
                     jnp.asarray(cache_len, jnp.int32))
                 cache_len += 1
                 nxt = self._sample(np.asarray(logits, np.float32))
-            active = [None] * self.slots
-        return [results[i] for i in range(len(prompts))]
+            for e, out in zip(wave, results):
+                e.future.set_result(out)
+        return [f.result() for f in futs]

@@ -6,7 +6,17 @@ traffic for the compiled step. Variable-size requests are packed head-to-
 tail into fixed-width slabs and padded up to POWER-OF-TWO shape buckets, so
 a bounded set of compiled programs (log2(max_batch) of them) serves any
 request mix with zero recompiles in steady state — the classic bucketing
-trick from LM serving applied to kernel projection.
+trick from LM serving applied to kernel projection. The queue/bucket/slab
+machinery itself lives in ``repro.serve.batching`` (shared with the decode
+engine).
+
+The request path is an ASYNC pipeline: ``submit`` returns a
+``concurrent.futures`` future immediately; a background flusher thread
+(``start``/``close``) drains the queue on a size-OR-deadline trigger and
+resolves the futures, so query batching overlaps with callers' work the
+same way the solver overlaps computation with communication. ``flush`` is
+the synchronous drain (same packing, same math — the async path is
+result-exact against it), and ``project_many`` the one-call convenience.
 
 Guarantees and knobs:
   * results are exactly what ``repro.core.oos.project`` returns for each
@@ -14,18 +24,23 @@ Guarantees and knobs:
     makes valid rows independent of them (asserted to float32 resolution in
     tests/test_kpca_engine.py; the only packing residue is XLA choosing a
     different gemm code path per slab shape, <= 4e-9 observed);
+  * admission control: ``queue_factor=k`` bounds the queue at
+    ``max_batch * k`` rows — beyond it ``submit`` rejects
+    (``QueueFullError``) or sheds the oldest queued requests, per
+    ``cfg.admission``; counters surface in ``EngineStats``;
   * ``use_pallas`` routes through the fused Pallas projection kernel;
   * ``query_dtype=jnp.bfloat16`` halves query-slab HBM traffic (accumulation
     stays fp32 inside the kernel) for throughput-bound fleets;
-  * per-request latency and queries/s accounting built in (served straight
-    into benchmarks/bench_serve_kpca.py).
+  * per-request latency/queue-wait and queries/s accounting built in
+    (served straight into benchmarks/bench_serve_async.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Any, List, Optional, Sequence, Tuple, Union
+from typing import Any, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +48,8 @@ import numpy as np
 
 from ..core import oos
 from ..core.oos import FittedKpca, ShardedFittedKpca
+from .batching import (EngineStats, QueueFullError, RequestFuture,
+                       RequestQueue, RequestStats, iter_slabs, pow2_buckets)
 from .publisher import ModelHandle
 
 
@@ -43,47 +60,25 @@ class KpcaServeConfig:
     use_pallas: bool = False      # fused Pallas kernel (interpret off-TPU)
     query_dtype: Any = None       # e.g. jnp.bfloat16 for cheaper slabs
     interpret: Optional[bool] = None  # forwarded to the Pallas wrapper
+    # -- async flusher / admission control --------------------------------
+    queue_factor: Optional[int] = None  # queue bound = max_batch * k rows;
+    #                                     None = unbounded, no admission
+    admission: str = "reject"     # "reject" new or "shed" oldest when full
+    flush_max_wait_s: float = 0.005   # deadline trigger: max queue wait of
+    #                                   the oldest request before a flush
+    flush_min_queries: Optional[int] = None  # size trigger (None: max_batch)
 
     def buckets(self) -> List[int]:
         """Power-of-two widths: min_bucket, 2*min_bucket, ..., max_batch."""
-        if not 0 < self.min_bucket <= self.max_batch:
+        return pow2_buckets(self.min_bucket, self.max_batch)
+
+    def queue_capacity(self) -> Optional[int]:
+        if self.queue_factor is None:
+            return None
+        if self.queue_factor < 1:
             raise ValueError(
-                f"need 0 < min_bucket <= max_batch, got "
-                f"min_bucket={self.min_bucket} max_batch={self.max_batch}")
-        out, b = [], self.min_bucket
-        while b < self.max_batch:
-            out.append(b)
-            b *= 2
-        out.append(self.max_batch)
-        return out
-
-
-@dataclasses.dataclass
-class RequestStats:
-    request_id: int
-    n_queries: int
-    latency_s: float              # wall time inside the engine for this req
-    model_version: int = 0        # handle version this request was served at
-
-
-@dataclasses.dataclass
-class EngineStats:
-    n_requests: int = 0
-    n_queries: int = 0
-    n_padded: int = 0             # wasted pad rows actually computed
-    n_compiles: int = 0           # distinct (bucket) programs built
-    total_time_s: float = 0.0
-    per_request: List[RequestStats] = dataclasses.field(default_factory=list)
-
-    @property
-    def queries_per_s(self) -> float:
-        return self.n_queries / self.total_time_s if self.total_time_s else 0.0
-
-    def latency_percentiles(self, qs=(50, 99)) -> Tuple[float, ...]:
-        """Per-request latency percentiles in seconds, one per entry of
-        ``qs`` (default p50/p99); (0.0, ...) before any request is served."""
-        lat = [r.latency_s for r in self.per_request] or [0.0]
-        return tuple(float(np.percentile(lat, q)) for q in qs)
+                f"queue_factor must be >= 1, got {self.queue_factor}")
+        return self.max_batch * self.queue_factor
 
 
 class KpcaEngine:
@@ -97,13 +92,23 @@ class KpcaEngine:
     replicated to every shard, so the engine's traffic shaping composes
     with device sharding unchanged.
 
+    Request API: ``submit`` enqueues and returns a future; results arrive
+    when a drain happens — synchronously via ``flush`` (or ``project_many``),
+    or from the background flusher thread between ``start`` and ``close``
+    (the engine is also a context manager doing exactly that). Both drains
+    run the same packing and the same compiled programs, so async results
+    are exact against the synchronous path.
+
     Live updates: the engine reads its model THROUGH a versioned
     ``repro.serve.publisher.ModelHandle`` (a bare model is wrapped in a
-    private one). Each flush snapshots (model, version) once, so every
-    slab of that flush — and therefore every in-flight request — is scored
-    against one consistent version even if a publish lands mid-flush; the
-    next flush picks up the new version. ``RequestStats.model_version``
-    records which version served each request.
+    private one). Each drain snapshots (model, version) once, so every
+    slab of that drain — and therefore every in-flight request — is scored
+    against one consistent version even if a publish lands mid-drain; the
+    next drain picks up the new version. For sharded models a per-shard
+    coefficient refresh is still one atomic whole-model publish
+    (``ModelHandle.refresh_shard``), so no request can ever see a mix of
+    shard versions. ``RequestStats.model_version`` records which version
+    served each request.
     """
 
     def __init__(self,
@@ -112,7 +117,8 @@ class KpcaEngine:
         """Args:
           model: servable artifact (plain or sharded) or a ``ModelHandle``
             wrapping one (live-publishable).
-          cfg: batching/bucketing/backend knobs (``KpcaServeConfig``).
+          cfg: batching/bucketing/backend/admission knobs
+            (``KpcaServeConfig``).
           mesh: for sharded models only — 1-D device mesh with
             ``model.n_shards`` devices; None builds one over local devices
             (or falls back to a same-math single-device reduction).
@@ -123,8 +129,11 @@ class KpcaEngine:
         self.cfg = cfg or KpcaServeConfig()
         self._buckets = self.cfg.buckets()
         self._compiled_shapes = set()
-        self._queue: List[Tuple[int, np.ndarray]] = []
-        self._next_id = 0
+        self._queue = RequestQueue(max_queries=self.cfg.queue_capacity(),
+                                   policy=self.cfg.admission)
+        self._serve_lock = threading.Lock()   # one drain at a time
+        self._stop = threading.Event()
+        self._flusher: Optional[threading.Thread] = None
         self.stats = EngineStats()
 
         if isinstance(model, ShardedFittedKpca):
@@ -155,8 +164,8 @@ class KpcaEngine:
 
     # ---- request API -----------------------------------------------------
 
-    def submit(self, x_query) -> int:
-        """Enqueue one request.
+    def submit(self, x_query) -> RequestFuture:
+        """Enqueue one request; returns its result future immediately.
 
         Args:
           x_query: (Q, M) array-like, M = model.n_features; cast to fp32
@@ -164,93 +173,171 @@ class KpcaEngine:
             build time).
 
         Returns:
-          Integer request id, the key of this request's (Q, C) scores in
-          the dict returned by the next ``flush``.
+          A ``concurrent.futures`` future resolving to this request's
+          (Q, C) float32 scores at the next drain — the background
+          flusher's (when running) or an explicit ``flush``. The future
+          also carries ``request_id``, the request's key in the dict
+          ``flush`` returns.
+
+        Raises:
+          QueueFullError: admission control refused the request
+            (``cfg.queue_factor`` bound exceeded under policy "reject", or
+            the request alone exceeds the whole queue capacity).
         """
         x = np.asarray(x_query, np.float32)
         if x.ndim != 2 or x.shape[1] != self.model.n_features:
             raise ValueError(
                 f"request must be (Q, {self.model.n_features}), "
                 f"got {x.shape}")
-        rid = self._next_id
-        self._next_id += 1
-        self._queue.append((rid, x))
-        return rid
+        try:
+            fut, shed = self._queue.put(x, n=x.shape[0])
+        except QueueFullError:
+            self.stats.n_rejected += 1
+            raise
+        if shed:
+            self.stats.n_shed += len(shed)
+        return fut
 
     def flush(self) -> dict:
-        """Serve every queued request; returns {request_id: (Q, C) scores}.
+        """Serve every queued request synchronously; resolves the futures
+        and returns {request_id: (Q, C) scores}.
 
         On failure the queued requests are restored (ahead of anything
         submitted meanwhile), so a crashed flush can simply be retried.
         """
-        queue, self._queue = self._queue, []
-        if not queue:
+        entries = self._queue.drain()
+        if not entries:
             return {}
         try:
-            return self._serve(queue)
+            out = self._serve(entries)
         except BaseException:
-            self._queue = queue + self._queue
+            self._queue.restore(entries)
             raise
-
-    def _serve(self, queue) -> dict:
-        # One consistent (model, version) snapshot for the whole flush:
-        # in-flight slabs finish on it even if a publish lands mid-flush.
-        model, version = self.handle.get()
-        results = {rid: [] for rid, _ in queue}
-        touched = {rid: 0.0 for rid, _ in queue}
-        sizes = {rid: x.shape[0] for rid, x in queue}
-
-        # Head-to-tail packing: one flat stream of (rid, row-range) spans.
-        stream = np.concatenate([x for _, x in queue], axis=0)
-        owners = np.concatenate(
-            [np.full(x.shape[0], rid, np.int64) for rid, x in queue])
-
-        # Accumulate stats locally and commit only after every slab served,
-        # so a failed-then-retried flush doesn't double-count its slabs.
-        total_dt, padded = 0.0, 0
-        pos = 0
-        while pos < stream.shape[0]:
-            take = min(self.cfg.max_batch, stream.shape[0] - pos)
-            bucket = self._bucket_for(take)
-            slab = np.zeros((bucket, stream.shape[1]), np.float32)
-            slab[:take] = stream[pos:pos + take]
-            t0 = time.perf_counter()
-            scores = np.asarray(self._run_slab(model, slab))
-            dt = time.perf_counter() - t0
-            padded += bucket - take
-            total_dt += dt
-            span_owners = owners[pos:pos + take]
-            for rid in np.unique(span_owners):
-                sel = span_owners == rid
-                results[rid].append(scores[:take][sel])
-                touched[rid] += dt
-            pos += take
-
-        self.stats.n_padded += padded
-        self.stats.total_time_s += total_dt
-        self.stats.n_requests += len(queue)
-        self.stats.n_queries += stream.shape[0]
-        for rid, _ in queue:
-            self.stats.per_request.append(
-                RequestStats(rid, sizes[rid], touched[rid], version))
-        empty = np.zeros((0, model.n_components), np.float32)
-        return {rid: np.concatenate(parts, axis=0) if parts else empty
-                for rid, parts in results.items()}
+        self._resolve(entries, out)
+        return out
 
     def project_many(self, requests: Sequence[Any]) -> List[np.ndarray]:
         """Convenience: submit + flush a list of (Q_i, M) arrays; returns
         the per-request (Q_i, C) score arrays in submission order."""
-        rids = [self.submit(x) for x in requests]
-        out = self.flush()
-        return [out[rid] for rid in rids]
+        futs = [self.submit(x) for x in requests]
+        self.flush()
+        return [f.result() for f in futs]
+
+    # ---- background flusher ----------------------------------------------
+
+    def start(self) -> "KpcaEngine":
+        """Start the background flusher thread (idempotent).
+
+        The flusher sleeps on the queue and drains it whenever either
+        trigger fires: queued rows reach ``cfg.flush_min_queries``
+        (default: one full ``max_batch`` slab), or the oldest request has
+        waited ``cfg.flush_max_wait_s``. A failed drain fails exactly the
+        futures of that batch (no retry loop) and keeps serving.
+        """
+        if self._flusher is not None:
+            return self
+        self._stop.clear()
+        self._flusher = threading.Thread(
+            target=self._flush_loop, name="kpca-engine-flusher", daemon=True)
+        self._flusher.start()
+        return self
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the flusher thread (joined) and settle the queue: serve
+        everything still queued when ``drain`` (default), else cancel the
+        pending futures. Safe to call twice; ``flush``/``submit`` keep
+        working afterwards (synchronous mode)."""
+        if self._flusher is not None:
+            self._stop.set()
+            self._queue.kick()
+            self._flusher.join(timeout=30.0)
+            if self._flusher.is_alive():       # pragma: no cover
+                raise RuntimeError("flusher thread failed to stop")
+            self._flusher = None
+        if drain:
+            self.flush()
+        else:
+            for e in self._queue.drain():
+                e.future.cancel()
+
+    @property
+    def running(self) -> bool:
+        return self._flusher is not None
+
+    def __enter__(self) -> "KpcaEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc[0] is None)
+
+    def _flush_loop(self) -> None:
+        trigger = self.cfg.flush_min_queries or self.cfg.max_batch
+        while True:
+            has_work = self._queue.wait_for_work(
+                trigger, self.cfg.flush_max_wait_s, self._stop)
+            if self._stop.is_set():
+                return                # close() settles whatever remains
+            if not has_work:
+                continue
+            entries = self._queue.drain()
+            if not entries:
+                continue
+            try:
+                out = self._serve(entries)
+            except BaseException as e:       # fail THIS batch, keep serving
+                for en in entries:
+                    if not en.future.done():
+                        en.future.set_exception(e)
+                continue
+            self._resolve(entries, out)
+
+    @staticmethod
+    def _resolve(entries, out: dict) -> None:
+        for e in entries:
+            if not e.future.done():          # skip caller-cancelled futures
+                e.future.set_result(out[e.rid])
 
     # ---- internals -------------------------------------------------------
 
-    def _bucket_for(self, size: int) -> int:
-        for b in self._buckets:
-            if size <= b:
-                return b
-        return self._buckets[-1]
+    def _serve(self, entries) -> dict:
+        with self._serve_lock:
+            return self._serve_locked(entries)
+
+    def _serve_locked(self, entries) -> dict:
+        # One consistent (model, version) snapshot for the whole drain:
+        # in-flight slabs finish on it even if a publish lands mid-drain.
+        model, version = self.handle.get()
+        t_start = time.monotonic()
+        results = {e.rid: [] for e in entries}
+        touched = {e.rid: 0.0 for e in entries}
+
+        # Accumulate stats locally and commit only after every slab served,
+        # so a failed-then-retried flush doesn't double-count its slabs.
+        total_dt, padded = 0.0, 0
+        for slab, take, span_owners in iter_slabs(
+                entries, self.cfg.max_batch, self._buckets):
+            t0 = time.perf_counter()
+            scores = np.asarray(self._run_slab(model, slab))
+            dt = time.perf_counter() - t0
+            padded += slab.shape[0] - take
+            total_dt += dt
+            for rid in np.unique(span_owners):
+                sel = span_owners == rid
+                results[rid].append(scores[:take][sel])
+                touched[rid] += dt
+
+        self.stats.n_padded += padded
+        self.stats.total_time_s += total_dt
+        self.stats.n_requests += len(entries)
+        self.stats.n_queries += sum(e.n for e in entries)
+        self.stats.n_flushes += 1
+        for e in entries:
+            self.stats.per_request.append(RequestStats(
+                e.rid, e.n, touched[e.rid], version,
+                queue_wait_s=max(0.0, t_start - e.t_submit)))
+        empty = np.zeros((0, model.n_components), np.float32)
+        return {rid: np.concatenate(parts, axis=0) if parts else empty
+                for rid, parts in results.items()}
 
     def _run_slab(self, model, slab: np.ndarray) -> jax.Array:
         xq = jnp.asarray(slab)
@@ -260,3 +347,7 @@ class KpcaEngine:
             self._compiled_shapes.add(xq.shape)
             self.stats.n_compiles += 1
         return self._proj(model, xq)
+
+
+__all__ = ["EngineStats", "KpcaEngine", "KpcaServeConfig", "QueueFullError",
+           "RequestFuture", "RequestStats"]

@@ -4,24 +4,35 @@ A still-running ADMM driver (``repro.core.solver.run_chunked``) produces a
 stream of coefficient snapshots; the serving side must pick them up without
 dropping or mixing in-flight work. ``ModelHandle`` is the seam: a
 thread-safe, versioned, atomically-swappable reference to a servable model.
-``KpcaEngine`` reads THROUGH the handle — each flush snapshots (model,
-version) once up front, so every slab of that flush scores against one
-consistent model version even if a publish lands mid-flush; the next flush
-sees the new version. Publishing never blocks serving (the swap is a
-reference assignment under a lock, not a copy).
+``KpcaEngine`` reads THROUGH the handle — each drain snapshots (model,
+version) once up front, so every slab of that drain scores against one
+consistent model version even if a publish lands mid-drain; the next drain
+sees the new version. Sharded models swap per shard the same way
+(``refresh_shard``): the rebuilt model is still ONE atomic publish, so a
+request can never observe a mix of shard versions. Publishing never blocks
+serving (the swap is a reference assignment under a lock, not a copy).
+
+The reverse direction must not block either: rebuilding + publishing a
+refresh stalls the solver driver for the refresh cost every time it fires.
+``BackgroundPublisher`` moves that work off-thread — the driver hands the
+live alpha over in O(1) and keeps iterating; a publisher thread performs
+refresh + publish, coalescing latest-wins per target (a stale snapshot that
+was never published is pure waste), mirroring how DeEPCA/COKE overlap
+computation with communication.
 
 End-to-end streaming glue: ``stream_chunks`` consumes a ``run_chunked``
-iterator and republishes a refreshed ``FittedKpca``
-(``repro.core.oos.refresh_coefficients`` — cached kernel-mean statistics,
-no Gram re-formation) every k chunks.
+iterator and republishes a refreshed model under a pluggable cadence
+policy (``repro.core.solver``: fixed every-k or residual-improvement
+triggered), optionally through a ``BackgroundPublisher``.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Iterable, Optional, Tuple
+from typing import Iterable, List, Optional, Tuple
 
 from ..core import oos
+from ..core.solver import resolve_refresh_policy
 
 
 class ModelHandle:
@@ -37,6 +48,10 @@ class ModelHandle:
 
     def __init__(self, model, version: int = 0):
         self._lock = threading.Lock()
+        # Serializes the read-rebuild-publish cycle of refresh/
+        # refresh_shard: two concurrent refreshes must not both rebuild
+        # from the same base and silently drop one of the updates.
+        self._refresh_lock = threading.Lock()
         self._model = model
         self._version = version
         self._kind = type(model)
@@ -84,35 +99,199 @@ class ModelHandle:
     def refresh(self, alpha) -> int:
         """Publish the current model rebuilt around live dual coefficients
         (``repro.core.oos.refresh_coefficients`` — reuses the cached
-        kernel-mean statistics). Returns the new version.
+        kernel-mean statistics; sharded models rebuild per shard). Returns
+        the new version. Compressed models cannot refresh — build and
+        ``publish`` a re-compressed model instead. Refreshes from
+        different threads serialize, so none is silently lost."""
+        with self._refresh_lock:
+            return self.publish(
+                oos.refresh_coefficients(self.current(), alpha))
 
-        Plain ``FittedKpca`` handles only; per-shard refresh of a
-        ``ShardedFittedKpca`` is a ROADMAP follow-up (build the refreshed
-        model yourself and ``publish`` it meanwhile)."""
-        with self._lock:
-            base = self._model
-        return self.publish(oos.refresh_coefficients(base, alpha))
+    def refresh_shard(self, shard: int, alpha) -> int:
+        """Publish the current SHARDED model with one shard's coefficient
+        rows swapped (``repro.core.oos.refresh_shard_coefficients`` —
+        global centering rebuilt from the per-shard cached stats). The
+        swap is still one atomic whole-model publish: concurrent readers
+        see the old model or the new one, never a mix of shards; and
+        concurrent refreshes serialize, so two threads swapping DIFFERENT
+        shards both land. Returns the new version."""
+        with self._refresh_lock:
+            return self.publish(oos.refresh_shard_coefficients(
+                self.current(), shard, alpha))
+
+
+class BackgroundPublisher:
+    """Non-blocking publish pipeline: hand coefficients over in O(1), a
+    daemon thread does the refresh + publish.
+
+    Jobs are coalesced LATEST-WINS per target — the whole model, or one
+    shard index: if the producer outpaces the publisher, intermediate
+    snapshots for the same target are dropped unpublished (``n_coalesced``
+    counts them), because only the freshest coefficients matter to the
+    serving side. Job order across targets is preserved (FIFO of targets).
+
+    A worker-side failure is remembered and re-raised at the next
+    ``drain``/``close`` on the caller's thread — the worker itself keeps
+    serving later jobs. Use as a context manager to guarantee the thread
+    is joined:
+
+        with BackgroundPublisher(handle) as pub:
+            for chunk in run_chunked(...):
+                pub.refresh(chunk.state.alpha)      # never blocks
+        # exit == drain (everything published) + join
+    """
+
+    def __init__(self, handle: ModelHandle):
+        self.handle = handle
+        self._cond = threading.Condition()
+        self._jobs = {}                  # key -> (fn_name, payload)
+        self._order: List[tuple] = []    # FIFO of pending keys
+        self._busy = False
+        self._closed = False
+        self._errors: List[BaseException] = []
+        self.n_published = 0
+        self.n_coalesced = 0
+        self._thread = threading.Thread(
+            target=self._run, name="kpca-publisher", daemon=True)
+        self._thread.start()
+
+    # -- producer side ------------------------------------------------------
+
+    def refresh(self, alpha) -> None:
+        """Queue a whole-model coefficient refresh (latest-wins)."""
+        self._enqueue(("refresh", None), alpha)
+
+    def refresh_shard(self, shard: int, alpha) -> None:
+        """Queue a single-shard coefficient refresh (latest-wins per
+        shard index)."""
+        self._enqueue(("shard", shard), alpha)
+
+    def publish(self, model) -> None:
+        """Queue a prebuilt model publish (latest-wins)."""
+        self._enqueue(("publish", None), model)
+
+    def _enqueue(self, key, payload) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("publisher is closed")
+            if key in self._jobs:
+                self.n_coalesced += 1
+            else:
+                self._order.append(key)
+            self._jobs[key] = payload
+            self._cond.notify_all()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every queued job has been published; re-raises the
+        first worker-side error if any occurred since the last drain."""
+        with self._cond:
+            if not self._cond.wait_for(
+                    lambda: not self._order and not self._busy,
+                    timeout=timeout):
+                raise TimeoutError("publisher did not drain in time")
+            self._reraise_locked()
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Drain remaining jobs, stop and JOIN the worker thread.
+        Idempotent; re-raises a pending worker error."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():      # pragma: no cover
+            raise RuntimeError("publisher thread failed to stop")
+        with self._cond:
+            self._reraise_locked()
+
+    def _reraise_locked(self) -> None:
+        if self._errors:
+            err, self._errors = self._errors[0], []
+            raise err
+
+    def __enter__(self) -> "BackgroundPublisher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker -------------------------------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._order and not self._closed:
+                    self._cond.wait()
+                if not self._order:      # closed and fully drained
+                    return
+                key = self._order.pop(0)
+                payload = self._jobs.pop(key)
+                self._busy = True
+            try:
+                kind, shard = key
+                if kind == "refresh":
+                    self.handle.refresh(payload)
+                elif kind == "shard":
+                    self.handle.refresh_shard(shard, payload)
+                else:
+                    self.handle.publish(payload)
+                ok = True
+            except BaseException as e:   # remembered, reraised at drain
+                ok = False
+                with self._cond:
+                    self._errors.append(e)
+            with self._cond:
+                if ok:
+                    self.n_published += 1
+                self._busy = False
+                self._cond.notify_all()
 
 
 def stream_chunks(chunks: Iterable, handle: ModelHandle,
-                  every: int = 1) -> Optional[object]:
+                  every: Optional[int] = None, policy=None,
+                  publisher: Optional[BackgroundPublisher] = None):
     """Drive a ``repro.core.solver.run_chunked`` iterator to completion,
-    refreshing ``handle`` from the live state every ``every`` chunks (and
-    always at the last chunk). Returns the final ``ChunkResult`` (None if
-    the iterator was empty)."""
-    if every < 1:
-        raise ValueError(f"every must be >= 1, got {every}")
+    refreshing ``handle`` from the live state under a cadence policy (and
+    always at the last chunk, so the served model never lags the finished
+    fit). Returns the final ``ChunkResult`` (None if the iterator was
+    empty).
+
+    Args:
+      chunks: the driver's ``ChunkResult`` iterator.
+      handle: publish target.
+      every: fixed cadence shorthand — refresh each ``every`` chunks
+        (``repro.core.solver.EveryK``). Mutually exclusive with
+        ``policy``; both None means every chunk.
+      policy: pluggable cadence — anything
+        ``repro.core.solver.resolve_refresh_policy`` accepts: an int, the
+        string "residual" (``ResidualImprovement``: publish only when the
+        primal residual improved by >= 10% since the last publish), a
+        ``should_refresh(ChunkResult) -> bool`` object, or a bare
+        callable.
+      publisher: route refreshes through a ``BackgroundPublisher`` so the
+        driver loop never blocks on a publish; drained (all snapshots
+        published, worker errors re-raised) before returning. The caller
+        still owns ``close``.
+    """
+    if every is not None and policy is not None:
+        raise ValueError("pass either every= or policy=, not both")
+    pol = resolve_refresh_policy(policy if policy is not None else every)
+    target = publisher if publisher is not None else handle
     last = None
     pending = False
-    for i, chunk in enumerate(chunks):
+    for chunk in chunks:
         last = chunk
-        pending = True
-        if (i + 1) % every == 0:
-            handle.refresh(chunk.state.alpha)
+        if pol.should_refresh(chunk):
+            target.refresh(chunk.state.alpha)
             pending = False
+        else:
+            pending = True
     if last is not None and pending:
-        handle.refresh(last.state.alpha)
+        target.refresh(last.state.alpha)
+    if publisher is not None:
+        publisher.drain()
     return last
 
 
-__all__ = ["ModelHandle", "stream_chunks"]
+__all__ = ["BackgroundPublisher", "ModelHandle", "stream_chunks"]

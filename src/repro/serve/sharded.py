@@ -23,6 +23,12 @@ Execution:
   * with no mesh (fewer devices than shards), a vmap-over-shards fallback
     computes the identical math on one device, so tests and laptops run the
     same code path modulo placement.
+
+Live updates: a sharded model refreshes per shard
+(``repro.core.oos.refresh_shard_coefficients`` — per-shard cached
+kernel-mean stats, global centering rebuilt post-hoc) and is republished as
+ONE atomic ``ModelHandle`` swap, so this module never sees a model whose
+shards disagree about the version; the scoring path stays version-free.
 """
 
 from __future__ import annotations

@@ -1,0 +1,182 @@
+"""Tests for the shared request batching/queueing layer
+(``repro.serve.batching``): bounded queue + admission control, drain
+triggers, pow2 buckets, and the two slab packers."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve.batching import (QueueFullError, RequestQueue, ShedError,
+                                  bucket_for, iter_slabs, left_pad_pack,
+                                  pow2_buckets)
+
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+class TestBuckets:
+    def test_power_of_two_ladder(self):
+        assert pow2_buckets(8, 64) == [8, 16, 32, 64]
+
+    def test_non_pow2_max_is_widest(self):
+        assert pow2_buckets(8, 48) == [8, 16, 32, 48]
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            pow2_buckets(8, 4)
+        with pytest.raises(ValueError):
+            pow2_buckets(0, 4)
+
+    def test_bucket_for(self):
+        buckets = [8, 16, 32]
+        assert bucket_for(buckets, 1) == 8
+        assert bucket_for(buckets, 8) == 8
+        assert bucket_for(buckets, 9) == 16
+        assert bucket_for(buckets, 99) == 32   # overflow -> widest
+
+
+class TestRequestQueue:
+    def test_fifo_put_drain(self):
+        q = RequestQueue()
+        futs = [q.put(f"p{i}", n=i + 1)[0] for i in range(3)]
+        assert q.depth == 6 and len(q) == 3
+        entries = q.drain()
+        assert [e.payload for e in entries] == ["p0", "p1", "p2"]
+        assert [e.future is f for e, f in zip(entries, futs)] == [True] * 3
+        assert q.depth == 0 and q.drain() == []
+
+    def test_take_and_restore_preserve_order(self):
+        q = RequestQueue()
+        for i in range(5):
+            q.put(i, n=1)
+        head = q.take(2)
+        assert [e.payload for e in head] == [0, 1] and q.depth == 3
+        q.restore(head)                        # failed batch goes back FIRST
+        assert [e.payload for e in q.drain()] == [0, 1, 2, 3, 4]
+
+    def test_reject_policy(self):
+        q = RequestQueue(max_queries=10, policy="reject")
+        q.put("a", n=6)
+        with pytest.raises(QueueFullError):
+            q.put("b", n=5)
+        assert q.n_rejected == 1
+        q.put("c", n=4)                        # exactly at capacity: fine
+        assert q.depth == 10 and q.depth_peak == 10
+
+    def test_shed_policy_drops_oldest(self):
+        q = RequestQueue(max_queries=10, policy="shed")
+        old, _ = q.put("old", n=6)
+        mid, _ = q.put("mid", n=4)
+        fut, shed = q.put("new", n=5)          # sheds "old" only
+        assert [f is old for f in shed] == [True]
+        assert q.n_shed == 1
+        with pytest.raises(ShedError):
+            old.result(timeout=0)
+        assert [e.payload for e in q.drain()] == ["mid", "new"]
+        assert not (mid.done() or fut.done())
+
+    def test_oversize_request_always_rejected(self):
+        q = RequestQueue(max_queries=10, policy="shed")
+        q.put("a", n=2)
+        with pytest.raises(QueueFullError):
+            q.put("huge", n=11)
+        assert q.n_rejected == 1 and q.n_shed == 0
+        assert len(q) == 1                     # nothing was shed for it
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RequestQueue(policy="fifo")
+        with pytest.raises(ValueError):
+            RequestQueue(max_queries=0)
+
+    def test_wait_for_work_size_trigger(self):
+        q = RequestQueue()
+        stop = threading.Event()
+        hits = []
+
+        def waiter():
+            hits.append(q.wait_for_work(4, max_wait_s=30.0, stop=stop))
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        try:
+            q.put("a", n=2)
+            time.sleep(0.05)
+            assert t.is_alive()                # 2 < 4 rows: still waiting
+            q.put("b", n=2)                    # size trigger fires
+            t.join(timeout=5.0)
+            assert not t.is_alive() and hits == [True]
+        finally:
+            stop.set()
+            q.kick()
+            t.join(timeout=5.0)
+
+    def test_wait_for_work_deadline_trigger(self):
+        q = RequestQueue()
+        stop = threading.Event()
+        q.put("a", n=1)
+        t0 = time.monotonic()
+        assert q.wait_for_work(100, max_wait_s=0.05, stop=stop) is True
+        assert time.monotonic() - t0 < 5.0
+
+    def test_wait_for_work_stop(self):
+        q = RequestQueue()
+        stop = threading.Event()
+        out = []
+
+        def waiter():
+            out.append(q.wait_for_work(4, max_wait_s=30.0, stop=stop))
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        try:
+            time.sleep(0.05)
+            stop.set()
+            q.kick()
+            t.join(timeout=5.0)
+            assert not t.is_alive() and out == [False]  # nothing queued
+        finally:
+            stop.set()
+            q.kick()
+            t.join(timeout=5.0)
+
+
+class TestSlabPacking:
+    def test_iter_slabs_spans_and_owners(self):
+        q = RequestQueue()
+        sizes = [3, 10, 1]
+        for i, s in enumerate(sizes):
+            q.put(_rand((s, 4), seed=i), n=s)
+        entries = q.drain()
+        slabs = list(iter_slabs(entries, max_batch=8, buckets=[4, 8]))
+        # 14 rows -> slabs of 8 and 6 (bucketed to 8)
+        assert [(s.shape, take) for s, take, _ in slabs] == \
+            [((8, 4), 8), ((8, 4), 6)]
+        owners = np.concatenate([o for _, _, o in slabs])
+        rids = [e.rid for e in entries]
+        assert owners.tolist() == [rids[0]] * 3 + [rids[1]] * 10 + [rids[2]]
+        # rows survive packing exactly; padding rows are zero
+        stream = np.concatenate([e.payload for e in entries])
+        np.testing.assert_array_equal(
+            np.concatenate([s[:t] for s, t, _ in slabs]), stream)
+        assert not np.any(slabs[-1][0][6:])
+
+    def test_iter_slabs_empty(self):
+        assert list(iter_slabs([], 8, [8])) == []
+        q = RequestQueue()
+        q.put(np.zeros((0, 3), np.float32), n=0)
+        assert list(iter_slabs(q.drain(), 8, [8])) == []
+
+    def test_left_pad_pack(self):
+        toks, plen = left_pad_pack([[1, 2, 3], [7]], slots=4)
+        assert plen == 3 and toks.shape == (4, 3)
+        assert toks[0].tolist() == [1, 2, 3]
+        assert toks[1].tolist() == [0, 0, 7]   # right-aligned
+        assert not toks[2:].any()              # idle slots all-pad
+        with pytest.raises(ValueError):
+            left_pad_pack([], slots=2)
+        with pytest.raises(ValueError):
+            left_pad_pack([[1], [2], [3]], slots=2)

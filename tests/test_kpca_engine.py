@@ -50,19 +50,19 @@ class TestEngineCorrectness:
         eng = KpcaEngine(model, KpcaServeConfig(max_batch=16, min_bucket=4))
         r0 = eng.submit(np.zeros((0, 12), np.float32))
         r1 = eng.submit(_rand((4, 12), seed=8))
-        out = eng.flush()
-        assert out[r0].shape == (0, 2)
+        eng.flush()
+        assert r0.result().shape == (0, 2)
         want = np.asarray(oos.project(model, jnp.asarray(
             _rand((4, 12), seed=8))))
-        np.testing.assert_allclose(out[r1], want, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(r1.result(), want, rtol=1e-6, atol=1e-7)
 
     def test_interleaved_submit_flush(self, model):
         eng = KpcaEngine(model, KpcaServeConfig(max_batch=16, min_bucket=4))
         r1 = eng.submit(_rand((5, 12), seed=1))
         r2 = eng.submit(_rand((20, 12), seed=2))
         out = eng.flush()
-        assert set(out) == {r1, r2}
-        assert out[r1].shape == (5, 2) and out[r2].shape == (20, 2)
+        assert set(out) == {r1.request_id, r2.request_id}
+        assert r1.result().shape == (5, 2) and r2.result().shape == (20, 2)
         assert eng.flush() == {}  # queue drained
 
     def test_compressed_model_serving(self, model):
@@ -81,6 +81,20 @@ class TestEngineCorrectness:
         [got] = eng.project_many([xq])
         want = np.asarray(oos.project(model, jnp.asarray(xq)))
         np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_poly_kernel_end_to_end(self):
+        """Non-RBF spec (normalized poly, §3.1) through the full serving
+        path: fit -> engine buckets/slabs -> fused Pallas kernel."""
+        spec = KernelSpec(kind="poly", degree=2, scale=0.5)
+        x = jnp.asarray(_rand((40, 8), seed=50))
+        pmodel = oos.fit_central(x, spec, n_components=2, center=True)
+        eng = KpcaEngine(pmodel, KpcaServeConfig(
+            max_batch=16, min_bucket=4, use_pallas=True, interpret=True))
+        reqs = [_rand((q, 8), seed=51 + q) for q in (3, 16, 21)]
+        got = eng.project_many(reqs)
+        for r, g in zip(reqs, got):
+            want = np.asarray(oos.project(pmodel, jnp.asarray(r)))
+            np.testing.assert_allclose(g, want, rtol=2e-4, atol=2e-4)
 
     def test_bf16_query_cast(self, model):
         cfg = KpcaServeConfig(max_batch=16, min_bucket=8,
@@ -107,7 +121,7 @@ class TestEngineAccounting:
 
     def test_failed_flush_restores_queue(self, model):
         eng = KpcaEngine(model, KpcaServeConfig(max_batch=8, min_bucket=8))
-        rid = eng.submit(_rand((3, 12), seed=8))
+        fut = eng.submit(_rand((3, 12), seed=8))
 
         def boom(_model, _slab):
             raise RuntimeError("injected")
@@ -115,9 +129,10 @@ class TestEngineAccounting:
         run_slab, eng._run_slab = eng._run_slab, boom
         with pytest.raises(RuntimeError):
             eng.flush()
+        assert not fut.done()                  # sync failure keeps it queued
         eng._run_slab = run_slab
-        out = eng.flush()                      # retry serves the request
-        assert out[rid].shape == (3, 2)
+        eng.flush()                            # retry serves the request
+        assert fut.result().shape == (3, 2)
         # the failed attempt must not contaminate the accounting
         assert eng.stats.n_requests == 1
         assert len(eng.stats.per_request) == 1

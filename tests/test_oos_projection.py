@@ -6,7 +6,9 @@ import numpy as np
 import pytest
 
 from repro.core import KernelSpec, central_kpca, kpca_project, oos
-from repro.kernels import project_op, project_reference
+from repro.core.kernels_math import gram
+from repro.kernels import (project_op, project_partial_op,
+                           project_partial_reference, project_reference)
 
 SPEC = KernelSpec(kind="rbf", gamma=0.25)
 
@@ -156,6 +158,43 @@ class TestProjectPallasKernel:
                                     block_m=128, interpret=True))
         want = np.asarray(project_reference(spec, xq, xs, a,
                                             row_mean_coef=rc, bias=b))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("kind", ["linear", "poly"])
+    def test_partial_op_non_rbf_matches_oracle(self, kind):
+        """Sharded serving's raw-partials entry point through the fused
+        kernel, for the normalized (§3.1) linear/poly kernels — including
+        zero-indicator padding rows, which must contribute nothing."""
+        spec = KernelSpec(kind=kind, degree=3, coef=0.5, scale=0.2)
+        assert spec.normalize                  # paper §3.1 normalization
+        rng = np.random.default_rng(41)
+        xq = jnp.asarray(rng.normal(size=(13, 9)).astype(np.float32))
+        xs = jnp.asarray(rng.normal(size=(21, 9)).astype(np.float32))
+        ae = rng.normal(size=(21, 3)).astype(np.float32)
+        ae[:, -1] = 1.0
+        ae[17:] = 0.0                          # shard-padding rows
+        ae = jnp.asarray(ae)
+        got = np.asarray(project_partial_op(spec, xq, xs, ae,
+                                            interpret=True))
+        want = np.asarray(project_partial_reference(spec, xq, xs, ae))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+        # last column really is the raw row-sum over the valid rows
+        np.testing.assert_allclose(
+            got[:, -1],
+            np.asarray(jnp.sum(gram(spec, xq, xs[:17]), axis=1)),
+            rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("kind", ["linear", "poly"])
+    def test_non_rbf_centered_fit_serves_through_pallas(self, kind):
+        """A CENTERED fit of a normalized non-RBF kernel must score
+        identically through the fused Pallas path and the jnp oracle."""
+        spec = KernelSpec(kind=kind, degree=2, scale=0.5)
+        x = jnp.asarray(_rand((40, 8), seed=42))
+        model = oos.fit_central(x, spec, n_components=2, center=True)
+        xq = jnp.asarray(_rand((11, 8), seed=43))
+        got = np.asarray(oos.project(model, xq, use_pallas=True,
+                                     interpret=True))
+        want = np.asarray(oos.project(model, xq))
         np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
     def test_model_pallas_path_matches_jnp_path(self, fitted):

@@ -12,8 +12,8 @@ import pytest
 from repro.core import KernelSpec, build_setup, oos, solver
 from repro.core.topology import ring
 from repro.data import node_dataset
-from repro.serve import KpcaEngine, KpcaServeConfig, ModelHandle, \
-    stream_chunks
+from repro.serve import BackgroundPublisher, KpcaEngine, KpcaServeConfig, \
+    ModelHandle, stream_chunks
 
 SPEC = KernelSpec(kind="rbf", gamma=0.25)
 
@@ -116,13 +116,6 @@ class TestModelHandle:
             oos.refresh_coefficients(model, model.coefs * 2.0), 2)
         assert h.publish(two_b) == 1       # same layout: fine
 
-    def test_refresh_rejects_sharded_models(self, fitted):
-        _, model = fitted
-        sharded, _ = oos.shard_fitted(model, 2)
-        h = ModelHandle(sharded)
-        with pytest.raises(TypeError):
-            h.refresh(model.coefs)
-
     def test_refresh_publishes_new_coefficients(self, fitted):
         _, model = fitted
         h = ModelHandle(model)
@@ -130,6 +123,143 @@ class TestModelHandle:
         assert h.refresh(alpha2) == 1
         np.testing.assert_allclose(np.asarray(h.current().coefs),
                                    np.asarray(alpha2), rtol=1e-6, atol=1e-6)
+
+
+class TestShardedRefresh:
+    """Per-shard coefficient refresh: each shard rebuilds from its own
+    cached kernel-mean slice; the global centering terms are recomputed
+    from the per-shard partial sums (no Gram contact)."""
+
+    @pytest.fixture(scope="class")
+    def sharded(self, fitted):
+        _, model = fitted
+        return oos.shard_fitted(model, 3)[0]   # uneven: 48 -> 16/16/16
+
+    def test_refresh_matches_full_refit(self, fitted, sharded):
+        x, model = fitted
+        alpha2 = jnp.asarray(_rand((48, 2), seed=20))
+        got = oos.refresh_coefficients(sharded, alpha2)
+        want, _ = oos.shard_fitted(
+            oos.from_dual(x, alpha2, SPEC, gamma=model.gamma, center=True),
+            3)
+        xq = jnp.asarray(_rand((7, 10), seed=21))
+        from repro.serve.sharded import project_sharded
+        np.testing.assert_allclose(
+            np.asarray(project_sharded(got, xq)),
+            np.asarray(project_sharded(want, xq)), rtol=1e-5, atol=1e-5)
+
+    def test_uneven_shards_refresh(self, fitted):
+        """Padding rows must stay inert through a refresh (45 -> 15/15/15
+        would be even; force 45 -> 4 shards = 12/11/11/11 padded to 12)."""
+        x, model = fitted
+        sub = oos.from_dual(x[:45], model.coefs[:45], SPEC,
+                            gamma=model.gamma, center=True)
+        sh, _ = oos.shard_fitted(sub, 4)
+        assert len(set(sh.shard_sizes)) > 1    # genuinely uneven
+        alpha2 = jnp.asarray(_rand((45, 2), seed=22))
+        got = oos.refresh_coefficients(sh, alpha2)
+        want, _ = oos.shard_fitted(
+            oos.from_dual(x[:45], alpha2, SPEC, gamma=model.gamma,
+                          center=True), 4)
+        xq = jnp.asarray(_rand((6, 10), seed=23))
+        from repro.serve.sharded import project_sharded
+        np.testing.assert_allclose(
+            np.asarray(project_sharded(got, xq)),
+            np.asarray(project_sharded(want, xq)), rtol=1e-5, atol=1e-5)
+
+    def test_single_shard_swap_composes_to_full_refresh(self, sharded):
+        alpha2 = jnp.asarray(_rand((48, 2), seed=24))
+        cur, off = sharded, 0
+        for j, n in enumerate(sharded.shard_sizes):
+            cur = oos.refresh_shard_coefficients(cur, j,
+                                                 alpha2[off:off + n])
+            off += n
+        want = oos.refresh_coefficients(sharded, alpha2)
+        xq = jnp.asarray(_rand((5, 10), seed=25))
+        from repro.serve.sharded import project_sharded
+        np.testing.assert_allclose(
+            np.asarray(project_sharded(cur, xq)),
+            np.asarray(project_sharded(want, xq)), rtol=1e-6, atol=1e-6)
+
+    def test_single_shard_swap_leaves_others_alone(self, sharded):
+        a0 = jnp.asarray(_rand((sharded.shard_sizes[1], 2), seed=26))
+        new = oos.refresh_shard_coefficients(sharded, 1, a0)
+        np.testing.assert_array_equal(
+            np.asarray(new.coefs_ext[0]), np.asarray(sharded.coefs_ext[0]))
+        np.testing.assert_array_equal(
+            np.asarray(new.coefs_ext[2]), np.asarray(sharded.coefs_ext[2]))
+        # the input model is unchanged (frozen artifact)
+        assert new is not sharded
+
+    def test_refresh_shard_validates(self, sharded):
+        with pytest.raises(ValueError):
+            oos.refresh_shard_coefficients(sharded, 7, jnp.ones((16, 2)))
+        with pytest.raises(ValueError):
+            oos.refresh_shard_coefficients(sharded, 0, jnp.ones((5, 2)))
+
+    def test_compressed_sharded_rejects_refresh(self, fitted):
+        _, model = fitted
+        sh, _ = oos.shard_fitted(model, 2, landmarks_per_shard=8)
+        assert sh.k_row_mean is None           # compression drops the cache
+        with pytest.raises(ValueError):
+            oos.refresh_coefficients(sh, jnp.ones((sh.n_support, 2)))
+
+    def test_cache_survives_shard_checkpoint_and_gather(self, sharded,
+                                                        tmp_path):
+        oos.save_sharded(str(tmp_path / "ck"), sharded)
+        back = oos.load_sharded(str(tmp_path / "ck"))
+        assert back.k_row_mean is not None
+        alpha2 = jnp.asarray(_rand((48, 2), seed=27))
+        np.testing.assert_allclose(
+            np.asarray(oos.refresh_coefficients(back, alpha2).bias),
+            np.asarray(oos.refresh_coefficients(sharded, alpha2).bias),
+            rtol=1e-6, atol=1e-6)
+        gathered = oos.gather_fitted(sharded)
+        assert gathered.k_row_mean is not None  # gather keeps refreshability
+        np.testing.assert_allclose(
+            np.asarray(oos.refresh_coefficients(gathered, alpha2).bias),
+            np.asarray(oos.refresh_coefficients(sharded, alpha2).bias),
+            rtol=1e-5, atol=1e-5)
+
+    def test_concurrent_shard_refreshes_both_land(self, sharded):
+        """refresh_shard is a read-rebuild-publish cycle; two threads
+        swapping DIFFERENT shards must serialize, so neither update is
+        silently overwritten by the other's stale base."""
+        import threading
+        h = ModelHandle(sharded)
+        finals = {}
+
+        def hammer(shard, seed):
+            a = None
+            for i in range(20):
+                a = jnp.asarray(_rand((sharded.shard_sizes[shard], 2),
+                                      seed=seed + i))
+                h.refresh_shard(shard, a)
+            finals[shard] = a
+
+        threads = [threading.Thread(target=hammer, args=(s, 100 * s))
+                   for s in (0, 1)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60.0)
+        assert h.version == 40
+        cur = h.current()
+        for s in (0, 1):                       # each shard's LAST write won
+            np.testing.assert_array_equal(
+                np.asarray(cur.coefs_ext[s, :sharded.shard_sizes[s], :2]),
+                np.asarray(finals[s]))
+
+    def test_handle_refresh_and_refresh_shard(self, sharded):
+        h = ModelHandle(sharded)
+        alpha2 = jnp.asarray(_rand((48, 2), seed=28))
+        assert h.refresh(alpha2) == 1          # sharded refresh now works
+        a_shard = jnp.asarray(_rand((sharded.shard_sizes[0], 2), seed=29))
+        assert h.refresh_shard(0, a_shard) == 2
+        np.testing.assert_allclose(
+            np.asarray(h.current().coefs_ext[0, :sharded.shard_sizes[0],
+                                             :2]),
+            np.asarray(a_shard), rtol=1e-6, atol=1e-6)
 
 
 class TestEngineVersionIsolation:
@@ -143,7 +273,7 @@ class TestEngineVersionIsolation:
         m2 = oos.refresh_coefficients(model, model.coefs * 2.0)
 
         x = _rand((20, 10), seed=11)           # 3 slabs at max_batch=8
-        rid = eng.submit(x)
+        fut = eng.submit(x)
         run_slab = eng._run_slab
         fired = dict(n=0)
 
@@ -155,18 +285,18 @@ class TestEngineVersionIsolation:
             return out
 
         eng._run_slab = publish_after_first_slab
-        out = eng.flush()
+        eng.flush()
         eng._run_slab = run_slab
         assert fired["n"] == 3
         np.testing.assert_allclose(
-            out[rid], np.asarray(oos.project(model, jnp.asarray(x))),
+            fut.result(), np.asarray(oos.project(model, jnp.asarray(x))),
             rtol=1e-5, atol=1e-5)
         assert eng.stats.per_request[-1].model_version == 0
 
-        rid2 = eng.submit(x)                   # next batch: new version
-        out2 = eng.flush()
+        fut2 = eng.submit(x)                   # next batch: new version
+        eng.flush()
         np.testing.assert_allclose(
-            out2[rid2], np.asarray(oos.project(m2, jnp.asarray(x))),
+            fut2.result(), np.asarray(oos.project(m2, jnp.asarray(x))),
             rtol=1e-5, atol=1e-5)
         assert eng.stats.per_request[-1].model_version == 1
 
@@ -235,6 +365,154 @@ class TestStreamingEndToEnd:
             handle, every=2)
         # 3 chunks (4+4+2): publishes after chunk 2 and at the tail chunk
         assert handle.version == 2
+        np.testing.assert_allclose(
+            np.asarray(handle.current().coefs).reshape(6, 10) * 6,
+            np.asarray(last.state.alpha), rtol=1e-6, atol=1e-6)
+
+    def test_stream_chunks_rejects_every_and_policy(self, fitted):
+        _, model = fitted
+        with pytest.raises(ValueError):
+            stream_chunks(iter([]), ModelHandle(model), every=2,
+                          policy="residual")
+
+
+class TestRefreshPolicies:
+    """Pluggable refresh cadence on the driver's chunk stream."""
+
+    @staticmethod
+    def _chunk(residual):
+        return solver.ChunkResult(
+            state=None, alpha_hist=None, lagrangian=None,
+            primal_residual=np.asarray([residual], np.float32),
+            rho_hist=None)
+
+    def test_every_k(self):
+        pol = solver.EveryK(3)
+        fired = [pol.should_refresh(self._chunk(1.0)) for _ in range(7)]
+        assert fired == [False, False, True, False, False, True, False]
+        with pytest.raises(ValueError):
+            solver.EveryK(0)
+
+    def test_residual_improvement_fires_on_drops_only(self):
+        pol = solver.ResidualImprovement(rel_drop=0.2)
+        seq = [10.0,    # first chunk: no baseline -> fire
+               9.5,     # -5% < 20% -> censored
+               7.9,     # -21% vs 10.0 -> fire, baseline 7.9
+               7.0,     # -11% -> censored
+               6.0]     # -24% vs 7.9 -> fire
+        fired = [pol.should_refresh(self._chunk(r)) for r in seq]
+        assert fired == [True, False, True, False, True]
+
+    def test_resolver_accepts_all_forms(self):
+        assert isinstance(solver.resolve_refresh_policy(None), solver.EveryK)
+        assert isinstance(solver.resolve_refresh_policy(4), solver.EveryK)
+        assert isinstance(solver.resolve_refresh_policy("residual"),
+                          solver.ResidualImprovement)
+        fn = solver.resolve_refresh_policy(
+            lambda ch: float(ch.primal_residual[-1]) < 1.0)
+        assert fn.should_refresh(self._chunk(0.5)) is True
+        assert fn.should_refresh(self._chunk(2.0)) is False
+        with pytest.raises(ValueError):
+            solver.resolve_refresh_policy("bogus")
+        with pytest.raises(TypeError):
+            solver.resolve_refresh_policy(1.5)
+
+    def test_residual_policy_censors_real_driver(self):
+        """Against a real converging run the residual trigger must publish
+        strictly fewer versions than every-chunk, while the final model
+        still matches the final alpha."""
+        spec = KernelSpec(kind="rbf", gamma=None)
+        nodes, _ = node_dataset(n_nodes=6, n_per_node=10, m=8, seed=2)
+        setup = build_setup(jnp.asarray(nodes), ring(6, hops=1), spec)
+        from repro.core.admm import initial_alpha
+        a0 = initial_alpha(setup, "local")
+        base = oos.from_decentralized(nodes, a0, spec, gamma=setup.gamma,
+                                      center=True)
+        h_all, h_res = ModelHandle(base), ModelHandle(base)
+        last = stream_chunks(
+            solver.run_chunked(setup, n_iters=16, chunk=2, alpha0=a0),
+            h_all)
+        stream_chunks(
+            solver.run_chunked(setup, n_iters=16, chunk=2, alpha0=a0),
+            h_res, policy=solver.ResidualImprovement(rel_drop=0.3))
+        assert 0 < h_res.version < h_all.version
+        np.testing.assert_allclose(          # tail publish: same final model
+            np.asarray(h_res.current().coefs),
+            np.asarray(h_all.current().coefs), rtol=1e-6, atol=1e-6)
+
+
+class TestBackgroundPublisher:
+    def test_refresh_and_drain(self, fitted):
+        _, model = fitted
+        h = ModelHandle(model)
+        with BackgroundPublisher(h) as pub:
+            alpha2 = jnp.asarray(_rand((48, 2), seed=30))
+            pub.refresh(alpha2)
+            pub.drain(timeout=30.0)
+            assert h.version == 1
+            np.testing.assert_allclose(np.asarray(h.current().coefs),
+                                       np.asarray(alpha2),
+                                       rtol=1e-6, atol=1e-6)
+        assert pub.n_published == 1
+
+    def test_latest_wins_coalescing(self, fitted):
+        """A burst of refreshes for the same target publishes at most a
+        few times — intermediate snapshots are dropped unpublished, and
+        the LAST one always lands."""
+        _, model = fitted
+        h = ModelHandle(model)
+        alphas = [jnp.asarray(_rand((48, 2), seed=31 + i))
+                  for i in range(12)]
+        with BackgroundPublisher(h) as pub:
+            for a in alphas:
+                pub.refresh(a)
+            pub.drain(timeout=30.0)
+        assert pub.n_published + pub.n_coalesced == 12
+        assert h.version == pub.n_published
+        np.testing.assert_allclose(np.asarray(h.current().coefs),
+                                   np.asarray(alphas[-1]),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_worker_error_reraised_at_drain(self, fitted):
+        _, model = fitted
+        h = ModelHandle(model)
+        pub = BackgroundPublisher(h)
+        pub.refresh(jnp.ones((7, 2)))          # wrong support size
+        with pytest.raises(ValueError):
+            pub.drain(timeout=30.0)
+        alpha2 = jnp.asarray(_rand((48, 2), seed=43))
+        pub.refresh(alpha2)                    # worker survived the error
+        pub.drain(timeout=30.0)
+        assert h.version == 1
+        pub.close()
+        with pytest.raises(RuntimeError):      # closed: no new jobs
+            pub.refresh(alpha2)
+
+    def test_close_flushes_pending_jobs(self, fitted):
+        _, model = fitted
+        h = ModelHandle(model)
+        pub = BackgroundPublisher(h)
+        pub.refresh(jnp.asarray(_rand((48, 2), seed=44)))
+        pub.close()                            # drains before stopping
+        assert h.version == 1
+        pub.close()                            # idempotent
+
+    def test_stream_chunks_through_background_publisher(self):
+        """The driver loop hands snapshots to the publisher thread and
+        keeps iterating; stream_chunks drains before returning, so the
+        handle ends at the final coefficients."""
+        spec = KernelSpec(kind="rbf", gamma=None)
+        nodes, _ = node_dataset(n_nodes=6, n_per_node=10, m=8, seed=3)
+        setup = build_setup(jnp.asarray(nodes), ring(6, hops=1), spec)
+        from repro.core.admm import initial_alpha
+        a0 = initial_alpha(setup, "local")
+        handle = ModelHandle(oos.from_decentralized(
+            nodes, a0, spec, gamma=setup.gamma, center=True))
+        with BackgroundPublisher(handle) as pub:
+            last = stream_chunks(
+                solver.run_chunked(setup, n_iters=12, chunk=3, alpha0=a0),
+                handle, publisher=pub)
+            assert handle.version >= 1         # drained before returning
         np.testing.assert_allclose(
             np.asarray(handle.current().coefs).reshape(6, 10) * 6,
             np.asarray(last.state.alpha), rtol=1e-6, atol=1e-6)
