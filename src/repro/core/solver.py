@@ -446,6 +446,14 @@ def run_chunked(setup, n_iters: int = 30, chunk: int = 10,
     The SPMD equivalent is threading (alpha, b, t0) through repeated
     ``repro.core.dkpca.dkpca_distributed`` calls.
 
+    Concurrency contract: the driver itself is single-threaded and holds no
+    locks — it must be advanced from ONE thread. Yielded ``ChunkResult``s
+    are immutable snapshots (device arrays are never mutated in place), so
+    handing ``result.state.alpha`` to another thread — e.g.
+    ``repro.serve.publisher.BackgroundPublisher.refresh`` — is safe without
+    synchronization on this side; the publisher's own condition variable
+    guards the handoff.
+
     Args:
       setup: ``repro.core.admm.DkpcaSetup``.
       n_iters: total iteration budget (across all chunks, including any

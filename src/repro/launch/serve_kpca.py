@@ -60,6 +60,8 @@ def main():
         eng.project_many([np.zeros((b, args.m), np.float32)])
     eng.stats = type(eng.stats)()
 
+    # No lock: each submitter thread writes ONLY its own slot (index tid),
+    # and the main thread reads after join() — per-slot thread affinity.
     rejected = [0] * args.submitters
     futures = [[] for _ in range(args.submitters)]
 

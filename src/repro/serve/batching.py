@@ -119,12 +119,12 @@ class RequestQueue:
         self.max_queries = max_queries
         self.policy = policy
         self._cond = threading.Condition()
-        self._entries: List[Request] = []
-        self._depth = 0               # queued rows
-        self._next_id = 0
-        self.n_rejected = 0
-        self.n_shed = 0
-        self.depth_peak = 0
+        self._entries: List[Request] = []   # guarded-by: _cond
+        self._depth = 0               # queued rows     guarded-by: _cond
+        self._next_id = 0                   # guarded-by: _cond
+        self.n_rejected = 0                 # guarded-by: _cond
+        self.n_shed = 0                     # guarded-by: _cond
+        self.depth_peak = 0                 # guarded-by: _cond
 
     # -- producer side ------------------------------------------------------
 

@@ -128,13 +128,19 @@ class KpcaEngine:
         model = self.handle.current()
         self.cfg = cfg or KpcaServeConfig()
         self._buckets = self.cfg.buckets()
-        self._compiled_shapes = set()
+        # _dispatch_lock orders concurrent drains' device programs; it is
+        # held only across the (async) dispatch calls, never across a
+        # device sync — the blocking host<->device copies happen outside
+        # it (see _serve). _stats_lock guards the host-side accounting
+        # that submitters and drains both touch.
+        self._dispatch_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._compiled_shapes = set()         # guarded-by: _stats_lock
+        self.stats = EngineStats()            # guarded-by: _stats_lock
         self._queue = RequestQueue(max_queries=self.cfg.queue_capacity(),
                                    policy=self.cfg.admission)
-        self._serve_lock = threading.Lock()   # one drain at a time
         self._stop = threading.Event()
         self._flusher: Optional[threading.Thread] = None
-        self.stats = EngineStats()
 
         if isinstance(model, ShardedFittedKpca):
             from .sharded import project_sharded
@@ -192,10 +198,12 @@ class KpcaEngine:
         try:
             fut, shed = self._queue.put(x, n=x.shape[0])
         except QueueFullError:
-            self.stats.n_rejected += 1
+            with self._stats_lock:
+                self.stats.n_rejected += 1
             raise
         if shed:
-            self.stats.n_shed += len(shed)
+            with self._stats_lock:
+                self.stats.n_shed += len(shed)
         return fut
 
     def flush(self) -> dict:
@@ -300,24 +308,28 @@ class KpcaEngine:
     # ---- internals -------------------------------------------------------
 
     def _serve(self, entries) -> dict:
-        with self._serve_lock:
-            return self._serve_locked(entries)
-
-    def _serve_locked(self, entries) -> dict:
         # One consistent (model, version) snapshot for the whole drain:
         # in-flight slabs finish on it even if a publish lands mid-drain.
         model, version = self.handle.get()
         t_start = time.monotonic()
+
+        # Three-phase drain so no device sync ever happens under a lock:
+        #   1. pack + host->device staging (no lock);
+        #   2. dispatch every slab under _dispatch_lock — jit dispatch is
+        #      ASYNC, so the critical section is microseconds and only
+        #      orders concurrent drains' device programs;
+        #   3. blocking device->host gets (no lock), then one stats commit.
+        slabs = list(iter_slabs(entries, self.cfg.max_batch, self._buckets))
+        staged = [self._stage_slab(slab) for slab, _, _ in slabs]
+        with self._dispatch_lock:
+            launched = [self._run_slab(model, xq) for xq in staged]
+
         results = {e.rid: [] for e in entries}
         touched = {e.rid: 0.0 for e in entries}
-
-        # Accumulate stats locally and commit only after every slab served,
-        # so a failed-then-retried flush doesn't double-count its slabs.
         total_dt, padded = 0.0, 0
-        for slab, take, span_owners in iter_slabs(
-                entries, self.cfg.max_batch, self._buckets):
+        for (slab, take, span_owners), dev in zip(slabs, launched):
             t0 = time.perf_counter()
-            scores = np.asarray(self._run_slab(model, slab))
+            scores = np.asarray(dev)             # waits for this slab
             dt = time.perf_counter() - t0
             padded += slab.shape[0] - take
             total_dt += dt
@@ -326,27 +338,38 @@ class KpcaEngine:
                 results[rid].append(scores[:take][sel])
                 touched[rid] += dt
 
-        self.stats.n_padded += padded
-        self.stats.total_time_s += total_dt
-        self.stats.n_requests += len(entries)
-        self.stats.n_queries += sum(e.n for e in entries)
-        self.stats.n_flushes += 1
-        for e in entries:
-            self.stats.per_request.append(RequestStats(
-                e.rid, e.n, touched[e.rid], version,
-                queue_wait_s=max(0.0, t_start - e.t_submit)))
+        # Commit only after every slab resolved, so a failed-then-retried
+        # flush doesn't double-count its slabs.
+        with self._stats_lock:
+            self.stats.n_padded += padded
+            self.stats.total_time_s += total_dt
+            self.stats.n_requests += len(entries)
+            self.stats.n_queries += sum(e.n for e in entries)
+            self.stats.n_flushes += 1
+            for e in entries:
+                self.stats.per_request.append(RequestStats(
+                    e.rid, e.n, touched[e.rid], version,
+                    queue_wait_s=max(0.0, t_start - e.t_submit)))
         empty = np.zeros((0, model.n_components), np.float32)
         return {rid: np.concatenate(parts, axis=0) if parts else empty
                 for rid, parts in results.items()}
 
-    def _run_slab(self, model, slab: np.ndarray) -> jax.Array:
+    def _stage_slab(self, slab: np.ndarray) -> jax.Array:
+        """Host->device transfer + dtype cast for one packed slab (phase 1
+        of a drain — runs outside every lock)."""
         xq = jnp.asarray(slab)
         if self.cfg.query_dtype is not None:
             xq = xq.astype(self.cfg.query_dtype)
-        if xq.shape not in self._compiled_shapes:
-            self._compiled_shapes.add(xq.shape)
-            self.stats.n_compiles += 1
-        return self._proj(model, xq)
+        with self._stats_lock:
+            if xq.shape not in self._compiled_shapes:
+                self._compiled_shapes.add(xq.shape)
+                self.stats.n_compiles += 1
+        return xq
+
+    def _run_slab(self, model, xq) -> jax.Array:
+        """Dispatch one staged slab (async; the caller owns the blocking
+        device->host get)."""
+        return self._proj(model, jnp.asarray(xq))
 
 
 __all__ = ["EngineStats", "KpcaEngine", "KpcaServeConfig", "QueueFullError",

@@ -52,8 +52,8 @@ class ModelHandle:
         # refresh_shard: two concurrent refreshes must not both rebuild
         # from the same base and silently drop one of the updates.
         self._refresh_lock = threading.Lock()
-        self._model = model
-        self._version = version
+        self._model = model                 # guarded-by: _lock
+        self._version = version             # guarded-by: _lock
         self._kind = type(model)
         # the engine's compiled sharded path also pins its mesh to the
         # initial shard count, so that is part of the contract too
@@ -144,13 +144,13 @@ class BackgroundPublisher:
     def __init__(self, handle: ModelHandle):
         self.handle = handle
         self._cond = threading.Condition()
-        self._jobs = {}                  # key -> (fn_name, payload)
-        self._order: List[tuple] = []    # FIFO of pending keys
-        self._busy = False
-        self._closed = False
-        self._errors: List[BaseException] = []
-        self.n_published = 0
-        self.n_coalesced = 0
+        self._jobs = {}                  # key -> payload   guarded-by: _cond
+        self._order: List[tuple] = []    # FIFO of keys     guarded-by: _cond
+        self._busy = False                  # guarded-by: _cond
+        self._closed = False                # guarded-by: _cond
+        self._errors: List[BaseException] = []  # guarded-by: _cond
+        self.n_published = 0                # guarded-by: _cond
+        self.n_coalesced = 0                # guarded-by: _cond
         self._thread = threading.Thread(
             target=self._run, name="kpca-publisher", daemon=True)
         self._thread.start()
@@ -205,7 +205,7 @@ class BackgroundPublisher:
         with self._cond:
             self._reraise_locked()
 
-    def _reraise_locked(self) -> None:
+    def _reraise_locked(self) -> None:  # holds-lock: _cond
         if self._errors:
             err, self._errors = self._errors[0], []
             raise err

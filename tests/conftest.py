@@ -14,3 +14,8 @@ if "xla_force_host_platform_device_count" not in os.environ.get(
         "XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+# The runtime lock-order detector (tests/helpers/lockcheck.py) registers an
+# autouse fixture that instruments every serve-layer lock in tests marked
+# @pytest.mark.lockcheck and fails them on a recorded AB/BA cycle.
+pytest_plugins = ["helpers.lockcheck"]

@@ -1,0 +1,242 @@
+"""Runtime lock-order detector: the dynamic companion to repro-lint's
+static ``lock-order`` rule (docs/STATIC_ANALYSIS.md).
+
+The static rule only sees inverse ``with`` nesting inside one file; real
+deadlocks in the serving stack span objects and threads — the flusher
+holds the engine's dispatch lock while reading through ``ModelHandle``,
+the publisher worker holds the refresh lock while publishing, the queue's
+condition sleeps under its own lock. This module observes the ACTUAL
+acquisition order at test time:
+
+  * ``LockOrderGraph`` — a thread-safe "acquired-while-holding" edge
+    graph with DFS cycle detection;
+  * ``OrderedLock`` — a ``threading.Lock`` work-alike that records an
+    edge ``held -> acquiring`` for every lock the acquiring thread
+    already holds (it also satisfies the private hooks
+    ``threading.Condition`` needs, so ``Condition(OrderedLock(...))``
+    instruments a condition's lock transparently);
+  * ``instrument_serving_locks`` — context manager that swaps the
+    ``threading`` module seen by ``repro.serve.batching`` /
+    ``kpca_engine`` / ``publisher`` for a shim whose ``Lock()`` /
+    ``Condition()`` build instrumented primitives named after the source
+    line that created them;
+  * the ``lock_order_guard`` autouse fixture — active for tests marked
+    ``@pytest.mark.lockcheck`` (module-wide via ``pytestmark`` in
+    tests/test_async_engine.py, test_batching.py, test_publisher.py):
+    every lock the serving layer creates during the test is instrumented,
+    and the test FAILS at teardown if the recorded order graph contains a
+    cycle — an AB/BA interleaving that deadlocks only under unlucky
+    scheduling fails deterministically here.
+
+A cycle in the graph is a potential deadlock even if the test happened to
+pass: two threads that ever acquire the same two locks in opposite orders
+can block each other forever under the right interleaving.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import linecache
+import re
+import sys
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+import pytest
+
+_ATTR_ASSIGN = re.compile(r"self\.(\w+)\s*=")
+
+
+class LockOrderGraph:
+    """Acquired-while-holding edges between named locks, per process.
+
+    ``record(held, acquiring)`` is called by ``OrderedLock`` under its own
+    internal lock; ``find_cycle`` runs a DFS over the accumulated edges
+    and returns one cycle as a name path (closed: first == last), or None.
+    """
+
+    def __init__(self):
+        self._mu = threading.Lock()
+        self._edges: Dict[str, Set[str]] = {}
+        self._local = threading.local()
+
+    # -- per-thread held stack ----------------------------------------------
+
+    def _held(self) -> List[str]:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    def on_acquiring(self, name: str) -> None:
+        held = self._held()
+        if held:
+            with self._mu:
+                for h in held:
+                    if h != name:
+                        self._edges.setdefault(h, set()).add(name)
+
+    def on_acquired(self, name: str) -> None:
+        self._held().append(name)
+
+    def on_released(self, name: str) -> None:
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] == name:
+                del held[i]
+                return
+
+    # -- analysis -----------------------------------------------------------
+
+    @property
+    def edges(self) -> Dict[str, Set[str]]:
+        with self._mu:
+            return {k: set(v) for k, v in self._edges.items()}
+
+    def find_cycle(self) -> Optional[List[str]]:
+        edges = self.edges
+        WHITE, GRAY, BLACK = 0, 1, 2
+        color = {n: WHITE for n in
+                 set(edges) | {v for vs in edges.values() for v in vs}}
+        path: List[str] = []
+
+        def dfs(n) -> Optional[List[str]]:
+            color[n] = GRAY
+            path.append(n)
+            for m in sorted(edges.get(n, ())):
+                if color[m] == GRAY:
+                    return path[path.index(m):] + [m]
+                if color[m] == WHITE:
+                    cyc = dfs(m)
+                    if cyc:
+                        return cyc
+            color[n] = BLACK
+            path.pop()
+            return None
+
+        for n in sorted(color):
+            if color[n] == WHITE:
+                cyc = dfs(n)
+                if cyc:
+                    return cyc
+        return None
+
+
+class OrderedLock:
+    """Drop-in ``threading.Lock`` that reports to a ``LockOrderGraph``.
+
+    Also provides the private hooks ``threading.Condition`` probes for
+    (``_is_owned`` etc. fall back correctly because this exposes plain
+    ``acquire``/``release``), so ``Condition(OrderedLock(...))`` works.
+    """
+
+    def __init__(self, name: str, graph: LockOrderGraph,
+                 inner: Optional[threading.Lock] = None):
+        self.name = name
+        self.graph = graph
+        self._inner = inner if inner is not None else threading.Lock()
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        self.graph.on_acquiring(self.name)
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self.graph.on_acquired(self.name)
+        return got
+
+    def release(self) -> None:
+        self._inner.release()
+        self.graph.on_released(self.name)
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def _is_owned(self) -> bool:
+        """Hook for ``threading.Condition``: owned iff this thread holds
+        the lock (tracked exactly by the per-thread held stack)."""
+        return self.name in self.graph._held()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return f"OrderedLock({self.name!r}, locked={self.locked()})"
+
+
+def _creation_site_name(depth: int = 2) -> str:
+    """Name a lock after the source line creating it: prefers the
+    ``self.<attr>`` being assigned, falls back to file:line."""
+    frame = sys._getframe(depth)
+    fname, lineno = frame.f_code.co_filename, frame.f_lineno
+    line = linecache.getline(fname, lineno)
+    m = _ATTR_ASSIGN.search(line)
+    mod = frame.f_globals.get("__name__", "?").rsplit(".", 1)[-1]
+    if m:
+        return f"{mod}.{m.group(1)}"
+    return f"{mod}:{lineno}"
+
+
+class _ThreadingShim:
+    """Stand-in for the ``threading`` module inside the serve modules:
+    ``Lock``/``Condition`` build instrumented primitives on ``graph``,
+    everything else (Thread, Event, local, ...) passes through."""
+
+    def __init__(self, graph: LockOrderGraph):
+        self.graph = graph
+
+    def Lock(self):
+        return OrderedLock(_creation_site_name(), self.graph)
+
+    def RLock(self):                          # pragma: no cover (unused)
+        return OrderedLock(_creation_site_name(), self.graph,
+                           inner=threading.RLock())
+
+    def Condition(self, lock=None):
+        if lock is None:
+            lock = OrderedLock(_creation_site_name(), self.graph)
+        return threading.Condition(lock)
+
+    def __getattr__(self, name):
+        return getattr(threading, name)
+
+
+_SERVE_MODULE_NAMES = ("repro.serve.batching", "repro.serve.kpca_engine",
+                       "repro.serve.publisher")
+
+
+@contextlib.contextmanager
+def instrument_serving_locks(graph: LockOrderGraph):
+    """Swap the ``threading`` binding of the serving modules for the
+    instrumenting shim; locks created by objects constructed inside the
+    context report to ``graph``. Pre-existing objects keep their plain
+    locks (construct engines/handles INSIDE the context)."""
+    import importlib
+    mods = [importlib.import_module(n) for n in _SERVE_MODULE_NAMES]
+    shim = _ThreadingShim(graph)
+    saved = [(m, m.threading) for m in mods]
+    for m in mods:
+        m.threading = shim
+    try:
+        yield graph
+    finally:
+        for m, orig in saved:
+            m.threading = orig
+
+
+@pytest.fixture(autouse=True)
+def lock_order_guard(request):
+    """Autouse (via this plugin) for tests marked ``lockcheck``: serve-
+    layer locks created during the test are instrumented, and a recorded
+    AB/BA acquisition cycle fails the test at teardown."""
+    if request.node.get_closest_marker("lockcheck") is None:
+        yield None
+        return
+    graph = LockOrderGraph()
+    with instrument_serving_locks(graph):
+        yield graph
+    cycle = graph.find_cycle()
+    assert cycle is None, (
+        f"lock-order cycle recorded: {' -> '.join(cycle)} — two threads "
+        f"acquire these locks in opposite orders (latent deadlock)")

@@ -20,6 +20,10 @@ from repro.serve import (KpcaEngine, KpcaServeConfig, ModelHandle,
 SPEC = KernelSpec(kind="rbf", gamma=0.25)
 WAIT = 30.0                                    # generous future timeout
 
+# Instrument every serve-layer lock and fail on a recorded AB/BA
+# acquisition cycle (tests/helpers/lockcheck.py).
+pytestmark = pytest.mark.lockcheck
+
 
 def _rand(shape, seed=0):
     return np.random.default_rng(seed).normal(size=shape).astype(np.float32)

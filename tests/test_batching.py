@@ -17,6 +17,11 @@ def _rand(shape, seed=0):
     return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
 
 
+# Instrument every serve-layer lock and fail on a recorded AB/BA
+# acquisition cycle (tests/helpers/lockcheck.py).
+pytestmark = pytest.mark.lockcheck
+
+
 class TestBuckets:
     def test_power_of_two_ladder(self):
         assert pow2_buckets(8, 64) == [8, 16, 32, 64]

@@ -1,0 +1,513 @@
+"""Tests for the repro-lint static analyzer (tools/lint): every rule gets
+a violation fixture AND a clean twin, plus pragma suppression, annotation
+parsing, the CLI output formats, and a self-check that the repo's own
+source tree is clean at HEAD.
+
+The analyzer is stdlib-only, so these tests never touch jax — keep it
+that way (a jitted-code *string* is just a string).
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from tools.lint import FileContext, all_rules, lint_source
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint(src, path="src/mod.py", select=None):
+    return lint_source(textwrap.dedent(src), path, select=select)
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# registry / engine basics
+
+
+class TestEngine:
+    def test_at_least_seven_distinct_rules_registered(self):
+        assert len(all_rules()) >= 7
+
+    def test_syntax_error_is_a_finding_not_a_crash(self):
+        out = lint("def broken(:\n")
+        assert rules_of(out) == ["syntax-error"]
+
+    def test_unknown_select_raises(self):
+        with pytest.raises(ValueError, match="unknown rule"):
+            lint("x = 1\n", select=["no-such-rule"])
+
+    def test_findings_sorted_and_deduped(self):
+        out = lint("""
+            import threading
+            def leak_a():
+                t = threading.Thread(target=print)
+                t.start()
+            def leak_b():
+                t = threading.Thread(target=print)
+                t.start()
+        """)
+        assert rules_of(out) == ["thread-join", "thread-join"]
+        assert [f.line for f in out] == sorted(f.line for f in out)
+
+    def test_as_dict_roundtrips(self):
+        (f,) = lint("lock = object()\nlock.acquire()\n")
+        d = f.as_dict()
+        assert d["rule"] == "bare-acquire" and d["line"] == 2
+
+
+class TestPragmas:
+    VIOLATION = "lock = object()\nlock.acquire()\n"
+
+    def test_trailing_pragma_suppresses(self):
+        assert lint("lock = object()\n"
+                    "lock.acquire()  # repro-lint: disable=bare-acquire\n") \
+            == []
+
+    def test_standalone_pragma_on_previous_line_suppresses(self):
+        assert lint("lock = object()\n"
+                    "# repro-lint: disable=bare-acquire\n"
+                    "lock.acquire()\n") == []
+
+    def test_disable_all(self):
+        assert lint("lock = object()\n"
+                    "lock.acquire()  # repro-lint: disable=all\n") == []
+
+    def test_wrong_rule_name_does_not_suppress(self):
+        out = lint("lock = object()\n"
+                   "lock.acquire()  # repro-lint: disable=lock-order\n")
+        assert rules_of(out) == ["bare-acquire"]
+
+    def test_unsuppressed_twin_still_fires(self):
+        assert rules_of(lint(self.VIOLATION)) == ["bare-acquire"]
+
+
+class TestAnnotationParsing:
+    SRC = textwrap.dedent("""
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0          # guarded-by: _lock
+                self.other = []     # trailing prose   guarded-by: _cond
+
+            def _bump_locked(self):  # holds-lock: _lock
+                self.n += 1
+    """)
+
+    def test_guarded_by_map(self):
+        ctx = FileContext("src/box.py", self.SRC)
+        assert ctx.guarded_by[("Box", "n")] == "_lock"
+        # marker parses even with prose before it on the comment
+        assert ctx.guarded_by[("Box", "other")] == "_cond"
+
+    def test_holds_lock_map(self):
+        ctx = FileContext("src/box.py", self.SRC)
+        assert "_lock" in ctx.holds_lock.values()
+
+    def test_is_test_detection(self):
+        assert FileContext("tests/test_x.py", "x = 1\n").is_test
+        assert FileContext("tests/conftest.py", "x = 1\n").is_test
+        assert not FileContext("src/repro/x.py", "x = 1\n").is_test
+
+
+# ---------------------------------------------------------------------------
+# concurrency rules
+
+
+class TestGuardedBy:
+    def test_unlocked_access_flagged(self):
+        out = lint("""
+            import threading
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.n = 0  # guarded-by: _lock
+                def bad(self):
+                    self.n += 1
+        """)
+        assert rules_of(out) == ["guarded-by"]
+
+    def test_locked_access_clean(self):
+        assert lint("""
+            import threading
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.n = 0  # guarded-by: _lock
+                def good(self):
+                    with self._lock:
+                        self.n += 1
+        """) == []
+
+    def test_nested_def_does_not_inherit_lock(self):
+        # a nested def may run on another thread; the with-block around
+        # its DEFINITION proves nothing about its execution
+        out = lint("""
+            import threading
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.n = 0  # guarded-by: _lock
+                def bad(self):
+                    with self._lock:
+                        def cb():
+                            self.n += 1
+                        return cb
+        """)
+        assert rules_of(out) == ["guarded-by"]
+
+    def test_holds_lock_annotation_satisfies(self):
+        assert lint("""
+            import threading
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.n = 0  # guarded-by: _lock
+                def _bump_locked(self):  # holds-lock: _lock
+                    self.n += 1
+        """) == []
+
+
+class TestBlockingInLock:
+    def test_device_get_inside_lock_flagged(self):
+        out = lint("""
+            import numpy as np
+            def flush(self, dev):
+                with self._lock:
+                    out = np.asarray(dev)
+                return out
+        """)
+        assert rules_of(out) == ["blocking-in-lock"]
+
+    def test_block_until_ready_and_item_flagged(self):
+        out = lint("""
+            def f(self, x):
+                with self._lock:
+                    x.block_until_ready()
+                    return x.item()
+        """)
+        assert rules_of(out) == ["blocking-in-lock"] * 2
+
+    def test_outside_lock_clean(self):
+        assert lint("""
+            import numpy as np
+            def flush(self, dev):
+                with self._lock:
+                    launched = dev
+                return np.asarray(launched)
+        """) == []
+
+    def test_non_lock_context_manager_clean(self):
+        assert lint("""
+            import numpy as np
+            def f(dev, path):
+                with open(path) as fh:
+                    return np.asarray(dev), fh.read()
+        """) == []
+
+
+class TestThreadJoin:
+    def test_unjoined_thread_flagged(self):
+        out = lint("""
+            import threading
+            def leak():
+                t = threading.Thread(target=print)
+                t.start()
+        """)
+        assert rules_of(out) == ["thread-join"]
+
+    def test_joined_thread_clean(self):
+        assert lint("""
+            import threading
+            def ok():
+                t = threading.Thread(target=print)
+                t.start()
+                t.join()
+        """) == []
+
+    def test_join_in_another_function_does_not_count(self):
+        out = lint("""
+            import threading
+            def leak():
+                t = threading.Thread(target=print)
+                t.start()
+            def unrelated():
+                t = object()
+                t.join()
+        """)
+        assert rules_of(out) == ["thread-join"]
+
+    def test_returned_thread_escapes(self):
+        assert lint("""
+            import threading
+            def spawn():
+                t = threading.Thread(target=print)
+                t.start()
+                return t
+        """) == []
+
+    def test_self_attr_thread_joined_elsewhere(self):
+        assert lint("""
+            import threading
+            class Eng:
+                def start(self):
+                    self._t = threading.Thread(target=print)
+                    self._t.start()
+                def close(self):
+                    self._t.join()
+        """) == []
+
+    def test_loop_alias_join(self):
+        assert lint("""
+            import threading
+            def fan_out():
+                ts = []
+                for i in range(3):
+                    t = threading.Thread(target=print)
+                    ts.append(t)
+                    t.start()
+                for t in ts:
+                    t.join()
+        """) == []
+
+
+class TestLockOrder:
+    def test_inverse_nesting_flagged(self):
+        out = lint("""
+            def a(self):
+                with self._lock_a:
+                    with self._lock_b:
+                        pass
+            def b(self):
+                with self._lock_b:
+                    with self._lock_a:
+                        pass
+        """)
+        assert rules_of(out) == ["lock-order"]
+
+    def test_consistent_nesting_clean(self):
+        assert lint("""
+            def a(self):
+                with self._lock_a:
+                    with self._lock_b:
+                        pass
+            def b(self):
+                with self._lock_a:
+                    with self._lock_b:
+                        pass
+        """) == []
+
+    def test_holds_lock_counts_as_outer(self):
+        out = lint("""
+            def locked_helper(self):  # holds-lock: _lock_a
+                with self._lock_b:
+                    pass
+            def other(self):
+                with self._lock_b:
+                    with self._lock_a:
+                        pass
+        """)
+        assert rules_of(out) == ["lock-order"]
+
+
+class TestBareAcquire:
+    def test_acquire_flagged(self):
+        out = lint("def f(self):\n    self._lock.acquire()\n")
+        assert rules_of(out) == ["bare-acquire"]
+
+    def test_with_statement_clean(self):
+        assert lint("def f(self):\n    with self._lock:\n        pass\n") \
+            == []
+
+    def test_non_lockish_name_clean(self):
+        assert lint("def f(sem_view):\n    sem_view.refresh()\n") == []
+
+
+# ---------------------------------------------------------------------------
+# jax rules
+
+
+class TestImpureJit:
+    def test_time_in_jitted_flagged(self):
+        out = lint("""
+            import time, jax
+            @jax.jit
+            def step(x):
+                t0 = time.monotonic()
+                return x + t0
+        """)
+        assert rules_of(out) == ["impure-jit"]
+
+    def test_np_random_in_jitted_flagged(self):
+        out = lint("""
+            import numpy as np
+            import jax
+            @jax.jit
+            def noisy(x):
+                return x + np.random.normal()
+        """)
+        assert rules_of(out) == ["impure-jit"]
+
+    def test_impurity_outside_jit_clean(self):
+        assert lint("""
+            import time
+            def host_step(x):
+                return x, time.monotonic()
+        """) == []
+
+    def test_jit_called_on_name_detected(self):
+        out = lint("""
+            import time, jax
+            def step(x):
+                return x + time.monotonic()
+            fast_step = jax.jit(step)
+        """)
+        assert rules_of(out) == ["impure-jit"]
+
+
+class TestClosureCapture:
+    def test_scalar_capture_flagged(self):
+        out = lint("""
+            import jax
+            def make(scale_db):
+                scale = 10.0 ** (scale_db / 10.0)
+                @jax.jit
+                def apply(x):
+                    return x * scale
+                return apply
+        """)
+        assert rules_of(out) == ["closure-capture"]
+
+    def test_argument_not_flagged(self):
+        assert lint("""
+            import jax
+            def make():
+                @jax.jit
+                def apply(x, scale):
+                    return x * scale
+                return apply
+        """) == []
+
+    def test_top_level_jit_not_flagged(self):
+        assert lint("""
+            import jax
+            SCALE = 2.0
+            @jax.jit
+            def apply(x):
+                return x * SCALE
+        """) == []
+
+
+class TestInterpretLiteral:
+    def test_hardcoded_interpret_flagged_in_src(self):
+        out = lint("""
+            import jax.experimental.pallas as pl
+            def gram(x):
+                return pl.pallas_call(kernel, interpret=True)(x)
+        """, path="src/repro/kernels/gram.py")
+        assert rules_of(out) == ["interpret-literal"]
+
+    def test_allowed_in_tests(self):
+        assert lint("""
+            import jax.experimental.pallas as pl
+            def gram(x):
+                return pl.pallas_call(kernel, interpret=True)(x)
+        """, path="tests/test_gram.py") == []
+
+    def test_flag_from_variable_clean(self):
+        assert lint("""
+            import jax.experimental.pallas as pl
+            def gram(x, interpret):
+                return pl.pallas_call(kernel, interpret=interpret)(x)
+        """, path="src/repro/kernels/gram.py") == []
+
+
+class TestDonatedReuse:
+    def test_reuse_after_donating_call_flagged(self):
+        out = lint("""
+            import jax
+            step = jax.jit(_step, donate_argnums=(0,))
+            def run(state):
+                new = step(state)
+                return new, state.norm
+        """)
+        assert rules_of(out) == ["donated-reuse"]
+
+    def test_rebinding_idiom_clean(self):
+        assert lint("""
+            import jax
+            step = jax.jit(_step, donate_argnums=(0,))
+            def run(state):
+                state = step(state)
+                return state
+        """) == []
+
+    def test_partial_decorator_detected(self):
+        out = lint("""
+            import jax
+            from functools import partial
+            @partial(jax.jit, donate_argnums=(0,))
+            def step(state):
+                return state
+            def run(state):
+                out = step(state)
+                return out, state.t
+        """)
+        assert rules_of(out) == ["donated-reuse"]
+
+
+# ---------------------------------------------------------------------------
+# CLI + repo self-check
+
+
+class TestCli:
+    def _run(self, *argv, cwd=REPO):
+        return subprocess.run([sys.executable, "-m", "tools.lint", *argv],
+                              capture_output=True, text=True, cwd=cwd)
+
+    def test_clean_tree_exits_zero(self):
+        res = self._run("src", "tests")
+        assert res.returncode == 0, res.stdout + res.stderr
+
+    def test_violation_exits_one_and_formats(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text("lock = object()\nlock.acquire()\n")
+        res = self._run(str(bad))
+        assert res.returncode == 1
+        assert "bare-acquire" in res.stdout
+
+        res = self._run("--format", "github", str(bad))
+        assert res.returncode == 1
+        assert res.stdout.startswith("::error file=")
+
+        res = self._run("--format", "json", str(bad))
+        payload = json.loads(res.stdout)
+        assert payload[0]["rule"] == "bare-acquire"
+
+    def test_select_filters(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text("lock = object()\nlock.acquire()\n")
+        res = self._run("--select", "lock-order", str(bad))
+        assert res.returncode == 0
+
+    def test_list_rules(self):
+        res = self._run("--list-rules")
+        assert res.returncode == 0
+        for rule in ("guarded-by", "blocking-in-lock", "thread-join",
+                     "lock-order", "bare-acquire", "impure-jit",
+                     "closure-capture", "interpret-literal",
+                     "donated-reuse"):
+            assert rule in res.stdout
+
+    def test_unknown_rule_is_usage_error(self):
+        res = self._run("--select", "bogus", "src")
+        assert res.returncode == 2

@@ -17,6 +17,10 @@ from repro.serve import BackgroundPublisher, KpcaEngine, KpcaServeConfig, \
 
 SPEC = KernelSpec(kind="rbf", gamma=0.25)
 
+# Instrument every serve-layer lock and fail on a recorded AB/BA
+# acquisition cycle (tests/helpers/lockcheck.py).
+pytestmark = pytest.mark.lockcheck
+
 
 def _rand(shape, seed=0):
     return np.random.default_rng(seed).normal(size=shape).astype(np.float32)

@@ -1,0 +1,1 @@
+# Repo tooling namespace (no runtime deps on src/; never imports jax).

@@ -1,0 +1,17 @@
+"""repro-lint: concurrency- and JAX-aware static analysis for this repo.
+
+``python -m tools.lint src tests`` walks the given files/directories and
+runs every registered rule over each Python file's AST. The rule catalog,
+the pragma syntax (``# repro-lint: disable=RULE``), and the source
+annotations the concurrency rules consume (``# guarded-by: <lock>``,
+``# holds-lock: <lock>``) are documented in docs/STATIC_ANALYSIS.md.
+
+Stdlib-only by design: the analyzer never imports jax (or anything from
+src/), so the CI job runs on a bare Python with no wheel cache.
+"""
+
+from .engine import (FileContext, Finding, Rule, all_rules, lint_file,
+                     lint_source, register)
+
+__all__ = ["FileContext", "Finding", "Rule", "all_rules", "lint_file",
+           "lint_source", "register"]

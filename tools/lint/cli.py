@@ -1,0 +1,87 @@
+"""Command line front end: ``python -m tools.lint PATHS...``.
+
+Formats:
+  * ``text`` (default) — ``path:line:col: rule message`` per finding;
+  * ``github`` — workflow annotation commands (``::error file=...``) so
+    findings surface inline on the PR diff;
+  * ``json`` — a list of finding objects for tooling.
+
+Exit status: 0 clean, 1 findings, 2 bad invocation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from .engine import Finding, all_rules, iter_findings
+
+
+def _format_text(findings: List[Finding]) -> str:
+    return "\n".join(f"{f.path}:{f.line}:{f.col}: {f.rule} {f.message}"
+                     for f in findings)
+
+
+def _format_github(findings: List[Finding]) -> str:
+    return "\n".join(
+        f"::error file={f.path},line={f.line},col={f.col},"
+        f"title=repro-lint {f.rule}::{f.message}" for f in findings)
+
+
+def _format_json(findings: List[Finding]) -> str:
+    return json.dumps([f.as_dict() for f in findings], indent=2)
+
+
+_FORMATS = {"text": _format_text, "github": _format_github,
+            "json": _format_json}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint: concurrency- and JAX-aware static "
+                    "analysis (see docs/STATIC_ANALYSIS.md)")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to lint (e.g. src tests)")
+    ap.add_argument("--format", choices=sorted(_FORMATS), default="text",
+                    help="output format (default: text)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule names to run "
+                         "(default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, cls in sorted(all_rules().items()):
+            print(f"{name:18s} {cls.summary}")
+        return 0
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("error: no paths given (try: python -m tools.lint src tests)",
+              file=sys.stderr)
+        return 2
+
+    select = None
+    if args.select:
+        select = [s.strip() for s in args.select.split(",") if s.strip()]
+    try:
+        findings = sorted(
+            iter_findings(args.paths, select=select),
+            key=lambda f: (f.path, f.line, f.col, f.rule))
+    except (ValueError, OSError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    out = _FORMATS[args.format](findings)
+    if out:
+        print(out)
+    if args.format != "json" and findings:
+        print(f"\n{len(findings)} finding(s).", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,233 @@
+"""Rule engine: registry, per-file context, pragma suppression, findings.
+
+A rule is a class with a ``name``, a one-line ``summary``, and a
+``check(ctx) -> iterable[Finding]``. Rules register themselves with the
+``@register`` decorator at import time (``tools.lint.rules`` imports every
+rule module). The engine owns everything rule-agnostic:
+
+  * building the ``FileContext`` (AST + comment map via ``tokenize`` +
+    parent links) once per file, shared by all rules;
+  * the suppression pragma: a ``# repro-lint: disable=RULE[,RULE]``
+    comment suppresses matching findings on its own line, or — when the
+    line holds nothing but the comment — on the next line. ``disable=all``
+    suppresses every rule;
+  * the source annotations the concurrency rules consume
+    (``# guarded-by: <lock>`` and ``# holds-lock: <lock>``), parsed here
+    so every rule sees one canonical comment map;
+  * stable ordering and the text/github/json output formats (in ``cli``).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, Iterable, Iterator, List, Optional, Type
+
+_PRAGMA = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\-\s]+)")
+# the marker may follow prose in the same comment ("# queued rows —
+# guarded-by: _cond"), so match anywhere after the hash
+_GUARDED_BY = re.compile(r"#.*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+_HOLDS_LOCK = re.compile(r"#.*holds-lock:\s*([A-Za-z_][A-Za-z0-9_]*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Rule:
+    """Base class: subclasses set ``name``/``summary`` and implement
+    ``check``. One instance is created per linted file."""
+
+    name: str = ""
+    summary: str = ""
+
+    def check(self, ctx: "FileContext") -> Iterable[Finding]:
+        raise NotImplementedError
+
+    # -- helpers shared by every rule --------------------------------------
+
+    def finding(self, ctx: "FileContext", node: ast.AST,
+                message: str) -> Finding:
+        return Finding(self.name, ctx.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), message)
+
+
+_REGISTRY: Dict[str, Type[Rule]] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator adding a rule to the global registry."""
+    if not cls.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    if cls.name in _REGISTRY:
+        raise ValueError(f"duplicate rule name {cls.name!r}")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, Type[Rule]]:
+    """name -> rule class for every registered rule (imports the rule
+    modules on first use)."""
+    from . import rules  # noqa: F401  (registration side effect)
+    return dict(_REGISTRY)
+
+
+class FileContext:
+    """Everything rules need about one file, computed once.
+
+    Attributes:
+      path: path string used in findings.
+      source: full text.
+      tree: parsed ``ast.Module`` with parent back-links on every node
+        (``node.parent``; the module root has none).
+      comments: line number -> raw comment text (``#`` included).
+      standalone_comments: line numbers whose only content is a comment.
+      is_test: file lives under a tests/ directory or is named test_*.py /
+        conftest.py — rules may relax (e.g. ``interpret-literal``).
+      guarded_by: (class name, attribute) -> lock name, from
+        ``# guarded-by:`` comments on ``self.<attr> = ...`` lines.
+      holds_lock: function/lambda line -> lock name, from ``# holds-lock:``
+        comments on (or immediately above) a ``def`` line.
+    """
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                child.parent = node
+        self.comments: Dict[int, str] = {}
+        self.standalone_comments: set = set()
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                line = tok.start[0]
+                self.comments[line] = tok.string
+                if tok.line.strip().startswith("#"):
+                    self.standalone_comments.add(line)
+        parts = path.replace("\\", "/").split("/")
+        base = parts[-1]
+        self.is_test = ("tests" in parts[:-1] or base.startswith("test_")
+                        or base == "conftest.py")
+        self.guarded_by = self._parse_guarded_by()
+        self.holds_lock = self._parse_holds_lock()
+
+    # -- annotation parsing -------------------------------------------------
+
+    def comment_for(self, line: int) -> Optional[str]:
+        """The comment governing ``line``: trailing on the line itself, or
+        a standalone comment on the line directly above."""
+        if line in self.comments and line not in self.standalone_comments:
+            return self.comments[line]
+        if line - 1 in self.standalone_comments:
+            return self.comments[line - 1]
+        return None
+
+    def _parse_guarded_by(self) -> Dict[tuple, str]:
+        out: Dict[tuple, str] = {}
+        for cls in ast.walk(self.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            for node in ast.walk(cls):
+                if not isinstance(node, (ast.Assign, ast.AnnAssign,
+                                         ast.AugAssign)):
+                    continue
+                comment = self.comment_for(node.lineno)
+                if not comment:
+                    continue
+                m = _GUARDED_BY.search(comment)
+                if not m:
+                    continue
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        out[(cls.name, t.attr)] = m.group(1)
+        return out
+
+    def _parse_holds_lock(self) -> Dict[int, str]:
+        out: Dict[int, str] = {}
+        for node in ast.walk(self.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            comment = self.comment_for(node.lineno)
+            if comment:
+                m = _HOLDS_LOCK.search(comment)
+                if m:
+                    out[node.lineno] = m.group(1)
+        return out
+
+    # -- pragma suppression -------------------------------------------------
+
+    def suppressed(self, finding: Finding) -> bool:
+        comment = self.comment_for(finding.line)
+        if not comment:
+            return False
+        m = _PRAGMA.search(comment)
+        if not m:
+            return False
+        names = {n.strip() for n in m.group(1).split(",") if n.strip()}
+        return "all" in names or finding.rule in names
+
+
+def lint_source(source: str, path: str = "<string>",
+                select: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Run (selected) rules over one source string; pragma-filtered and
+    sorted by location. A syntax error yields a single ``syntax-error``
+    finding instead of raising."""
+    registry = all_rules()
+    if select is not None:
+        unknown = set(select) - set(registry)
+        if unknown:
+            raise ValueError(f"unknown rule(s): {', '.join(sorted(unknown))}")
+        registry = {k: v for k, v in registry.items() if k in select}
+    try:
+        ctx = FileContext(path, source)
+    except SyntaxError as e:
+        return [Finding("syntax-error", path, e.lineno or 1, e.offset or 0,
+                        f"cannot parse: {e.msg}")]
+    findings: List[Finding] = []
+    for cls in registry.values():
+        for f in cls().check(ctx):
+            if not ctx.suppressed(f):
+                findings.append(f)
+    return sorted(set(findings),
+                  key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def lint_file(path: str,
+              select: Optional[Iterable[str]] = None) -> List[Finding]:
+    with open(path, encoding="utf-8") as fh:
+        return lint_source(fh.read(), path, select=select)
+
+
+def iter_findings(paths: Iterable[str],
+                  select: Optional[Iterable[str]] = None
+                  ) -> Iterator[Finding]:
+    import os
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for name in sorted(files):
+                    if name.endswith(".py"):
+                        yield from lint_file(os.path.join(root, name),
+                                             select=select)
+        else:
+            yield from lint_file(p, select=select)

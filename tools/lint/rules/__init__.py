@@ -1,0 +1,5 @@
+"""Rule modules register themselves on import (``@register``)."""
+
+from . import concurrency, jaxrules  # noqa: F401
+
+__all__ = ["concurrency", "jaxrules"]

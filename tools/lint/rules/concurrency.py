@@ -1,0 +1,376 @@
+"""Concurrency rules for the threaded serving stack.
+
+These rules turn the lock discipline of ``repro.serve`` into machine-checked
+invariants:
+
+  * ``guarded-by`` — an attribute annotated ``# guarded-by: <lock>`` on its
+    ``__init__`` assignment may only be touched inside a matching
+    ``with self.<lock>:`` scope (or a method annotated
+    ``# holds-lock: <lock>``).
+  * ``blocking-in-lock`` — no host/device synchronization
+    (``block_until_ready``, ``np.asarray``/``jax.device_get``, ``.item()``,
+    ``float(...)`` on computed values) inside a ``with <lock>:`` body; a
+    device sync under a hot lock serializes every other thread behind the
+    accelerator.
+  * ``thread-join`` — every ``threading.Thread`` must have a reachable
+    ``join`` in its module (or escape to the caller via ``return``).
+  * ``lock-order`` — two locks nested in opposite orders anywhere in one
+    file (the static AB/BA smell; the runtime companion is
+    ``tests/helpers/lockcheck.py``).
+  * ``bare-acquire`` — ``lock.acquire()`` outside a ``with`` (un-released
+    on any exception path).
+
+Scope discipline: a nested ``def`` inside a ``with lock:`` body is NOT
+considered to run under the lock (it usually escapes to another thread);
+a ``lambda`` IS (the dominant pattern is ``cond.wait_for(lambda: ...)``,
+which the condition invokes while holding its lock).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..engine import FileContext, Finding, Rule, register
+
+_LOCKISH = ("lock", "cond", "mutex", "sem")
+
+
+def lock_name(expr: ast.AST) -> Optional[str]:
+    """The short lock name of a with-item context expression:
+    ``self._lock`` -> ``_lock``, ``lk`` -> ``lk``, ``self._queue._cond`` ->
+    ``_cond``; None for anything that is not a name/attribute chain."""
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    if isinstance(expr, ast.Name):
+        return expr.id
+    return None
+
+
+def is_lockish(name: Optional[str]) -> bool:
+    return name is not None and any(s in name.lower() for s in _LOCKISH)
+
+
+def _with_locks(node: ast.With) -> List[str]:
+    """Lock-ish names entered by one ``with`` statement."""
+    out = []
+    for item in node.items:
+        name = lock_name(item.context_expr)
+        if is_lockish(name):
+            out.append(name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+@register
+class GuardedByRule(Rule):
+    name = "guarded-by"
+    summary = ("attributes annotated '# guarded-by: <lock>' may only be "
+               "accessed under 'with self.<lock>:'")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for cls in ast.walk(ctx.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            guards = {attr: lk for (cname, attr), lk in
+                      ctx.guarded_by.items() if cname == cls.name}
+            if not guards:
+                continue
+            for meth in cls.body:
+                if not isinstance(meth, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if meth.name == "__init__":
+                    continue  # construction precedes sharing
+                held: Set[str] = set()
+                lk = ctx.holds_lock.get(meth.lineno)
+                if lk:
+                    held.add(lk)
+                yield from self._scan(ctx, meth.body, guards, held)
+
+    def _scan(self, ctx, stmts, guards, held) -> Iterator[Finding]:
+        for stmt in stmts:
+            yield from self._scan_node(ctx, stmt, guards, held)
+
+    def _scan_node(self, ctx, node, guards, held) -> Iterator[Finding]:
+        if isinstance(node, ast.With):
+            inner = held | set(_with_locks(node))
+            for item in node.items:
+                yield from self._scan_node(ctx, item.context_expr,
+                                           guards, held)
+            yield from self._scan(ctx, node.body, guards, inner)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a nested def may run on another thread: lock NOT held inside
+            lk = ctx.holds_lock.get(node.lineno)
+            inner = {lk} if lk else set()
+            yield from self._scan(ctx, node.body, guards, inner)
+            return
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self" and node.attr in guards
+                and guards[node.attr] not in held):
+            yield self.finding(
+                ctx, node,
+                f"'self.{node.attr}' is guarded by "
+                f"'{guards[node.attr]}' but accessed without "
+                f"'with self.{guards[node.attr]}:'")
+            return
+        for child in ast.iter_child_nodes(node):
+            yield from self._scan_node(ctx, child, guards, held)
+
+
+# ---------------------------------------------------------------------------
+
+_BLOCKING_METHODS = {"block_until_ready", "item"}
+_BLOCKING_CALLS = {("np", "asarray"), ("numpy", "asarray"),
+                   ("jax", "device_get"), ("jax", "block_until_ready")}
+
+
+@register
+class BlockingInLockRule(Rule):
+    name = "blocking-in-lock"
+    summary = ("no device synchronization (block_until_ready, np.asarray/"
+               "jax.device_get, .item(), float(<computed>)) inside a "
+               "'with <lock>:' body")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        yield from self._scan(ctx, ctx.tree.body, held=[])
+
+    def _scan(self, ctx, stmts, held) -> Iterator[Finding]:
+        for stmt in stmts:
+            yield from self._scan_node(ctx, stmt, held)
+
+    def _scan_node(self, ctx, node, held) -> Iterator[Finding]:
+        if isinstance(node, ast.With):
+            locks = _with_locks(node)
+            for item in node.items:
+                yield from self._scan_node(ctx, item.context_expr, held)
+            yield from self._scan(ctx, node.body, held + locks)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            lk = ctx.holds_lock.get(node.lineno)
+            yield from self._scan(ctx, node.body, [lk] if lk else [])
+            return
+        if held and isinstance(node, ast.Call):
+            why = self._blocking(node)
+            if why:
+                yield self.finding(
+                    ctx, node,
+                    f"{why} while holding '{held[-1]}' — move the device "
+                    f"sync outside the critical section")
+        for child in ast.iter_child_nodes(node):
+            yield from self._scan_node(ctx, child, held)
+
+    @staticmethod
+    def _blocking(call: ast.Call) -> Optional[str]:
+        fn = call.func
+        if isinstance(fn, ast.Attribute):
+            if fn.attr in _BLOCKING_METHODS and not call.args:
+                return f"'.{fn.attr}()' blocks on the device"
+            if isinstance(fn.value, ast.Name) and \
+                    (fn.value.id, fn.attr) in _BLOCKING_CALLS:
+                return (f"'{fn.value.id}.{fn.attr}(...)' device-transfers "
+                        f"(and synchronizes)")
+        if isinstance(fn, ast.Name) and fn.id == "float" and call.args:
+            arg = call.args[0]
+            if isinstance(arg, (ast.Call, ast.Attribute, ast.Subscript)):
+                return "'float(...)' on a computed value synchronizes"
+        return None
+
+
+# ---------------------------------------------------------------------------
+
+
+@register
+class ThreadJoinRule(Rule):
+    name = "thread-join"
+    summary = ("every threading.Thread needs a reachable .join() in its "
+               "module (or must escape via return)")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        creations = []           # (node, kind, name) kind in name/attr/None
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and self._is_thread_ctor(node.func):
+                creations.append((node,) + self._binding(node))
+        if not creations:
+            return
+        _, joined_attrs = self._joined(ctx.tree)
+        for node, kind, name in creations:
+            # name bindings are local: search the enclosing function only
+            # (a join on a same-named variable elsewhere proves nothing);
+            # self-attribute bindings are object-lifetime: search the file.
+            scope = self._enclosing_scope(node, ctx.tree)
+            joined_names, _ = self._joined(scope)
+            if kind == "name" and (name in joined_names
+                                   or name in self._returned_names(scope)):
+                continue
+            if kind == "attr" and name in joined_attrs:
+                continue
+            if kind == "return":
+                continue
+            target = f"'{name}'" if name else "an unbound thread"
+            yield self.finding(
+                ctx, node,
+                f"threading.Thread bound to {target} is never joined in "
+                f"this module — a leaked thread outlives the test/request "
+                f"that started it")
+
+    @staticmethod
+    def _enclosing_scope(node: ast.AST, tree: ast.Module) -> ast.AST:
+        while hasattr(node, "parent"):
+            node = node.parent
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return node
+        return tree
+
+    @staticmethod
+    def _is_thread_ctor(fn) -> bool:
+        if isinstance(fn, ast.Attribute):
+            return (fn.attr == "Thread" and isinstance(fn.value, ast.Name)
+                    and fn.value.id == "threading")
+        return isinstance(fn, ast.Name) and fn.id == "Thread"
+
+    @staticmethod
+    def _binding(call: ast.Call) -> Tuple[Optional[str], Optional[str]]:
+        """How the Thread object is bound: walk ancestors until a
+        statement. Returns (kind, name)."""
+        node = call
+        while hasattr(node, "parent"):
+            parent = node.parent
+            if isinstance(parent, ast.Return):
+                return "return", None
+            if isinstance(parent, ast.Assign):
+                for t in parent.targets:
+                    if isinstance(t, ast.Name):
+                        return "name", t.id
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        return "attr", t.attr
+                return None, None
+            if isinstance(parent, ast.Call) and \
+                    isinstance(parent.func, ast.Attribute) and \
+                    parent.func.attr == "append" and \
+                    isinstance(parent.func.value, ast.Name):
+                return "name", parent.func.value.id   # L.append(Thread())
+            if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.Module, ast.ClassDef)):
+                break
+            node = parent
+        return None, None
+
+    @staticmethod
+    def _joined(tree) -> Tuple[Set[str], Set[str]]:
+        """Names/attrs with an ``X.join()`` call, plus loop/comprehension
+        aliasing: ``for t in L: t.join()`` marks ``L`` joined."""
+        names: Set[str] = set()
+        attrs: Set[str] = set()
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "join"):
+                continue
+            base = node.func.value
+            if isinstance(base, ast.Name):
+                names.add(base.id)
+            elif isinstance(base, ast.Attribute) and \
+                    isinstance(base.value, ast.Name) and \
+                    base.value.id == "self":
+                attrs.add(base.attr)
+        # loop aliasing: for v in L / [v.join() for v in L]
+        for node in ast.walk(tree):
+            iters = []
+            if isinstance(node, ast.For) and isinstance(node.target,
+                                                        ast.Name):
+                iters.append((node.target.id, node.iter))
+            elif isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+                for gen in node.generators:
+                    if isinstance(gen.target, ast.Name):
+                        iters.append((gen.target.id, gen.iter))
+            for var, it in iters:
+                if var in names and isinstance(it, ast.Name):
+                    names.add(it.id)
+        return names, attrs
+
+    @staticmethod
+    def _returned_names(tree) -> Set[str]:
+        out: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Return) and node.value is not None:
+                for sub in ast.walk(node.value):
+                    if isinstance(sub, ast.Name):
+                        out.add(sub.id)
+        return out
+
+
+# ---------------------------------------------------------------------------
+
+
+@register
+class LockOrderRule(Rule):
+    name = "lock-order"
+    summary = ("two locks nested in opposite orders in one file "
+               "(static AB/BA deadlock smell)")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        pairs: Dict[Tuple[str, str], ast.AST] = {}
+        order: List[Tuple[str, str]] = []
+        self._collect(ctx, ctx.tree.body, [], pairs, order)
+        for a, b in order:
+            if (b, a) in pairs and a != b:
+                node = pairs[(a, b)]
+                if (a, b) in pairs and \
+                        pairs[(a, b)].lineno > pairs[(b, a)].lineno:
+                    yield self.finding(
+                        ctx, node,
+                        f"lock '{b}' is taken inside '{a}' here, but "
+                        f"'{a}' inside '{b}' at line "
+                        f"{pairs[(b, a)].lineno} — inverse nesting can "
+                        f"deadlock under contention")
+
+    def _collect(self, ctx, stmts, held, pairs, order) -> None:
+        for stmt in stmts:
+            self._collect_node(ctx, stmt, held, pairs, order)
+
+    def _collect_node(self, ctx, node, held, pairs, order) -> None:
+        if isinstance(node, ast.With):
+            locks = _with_locks(node)
+            for outer in held:
+                for inner in locks:
+                    key = (outer, inner)
+                    if key not in pairs:
+                        pairs[key] = node
+                        order.append(key)
+            self._collect(ctx, node.body, held + locks, pairs, order)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            lk = ctx.holds_lock.get(node.lineno)
+            self._collect(ctx, node.body, [lk] if lk else [], pairs, order)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._collect_node(ctx, child, held, pairs, order)
+
+
+# ---------------------------------------------------------------------------
+
+
+@register
+class BareAcquireRule(Rule):
+    name = "bare-acquire"
+    summary = ("lock.acquire() outside 'with' leaks the lock on any "
+               "exception path")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "acquire"
+                    and is_lockish(lock_name(node.func.value))):
+                name = lock_name(node.func.value)
+                yield self.finding(
+                    ctx, node,
+                    f"bare '{name}.acquire()' — use 'with {name}:' so the "
+                    f"lock is released on every exit path")

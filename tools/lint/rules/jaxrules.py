@@ -1,0 +1,356 @@
+"""JAX/Pallas purity and recompilation rules.
+
+Tracing makes a specific class of Python habits silently wrong: host-side
+nondeterminism is baked in at trace time (``impure-jit``), Python scalars
+captured by closure are frozen into the compiled program and never retrace
+(``closure-capture``), a hardcoded ``interpret=True`` ships the Pallas
+interpreter to production (``interpret-literal``), and a buffer passed to a
+``donate_argnums`` jit is dead the moment the call returns
+(``donated-reuse``).
+
+Jitted functions are found syntactically: a ``def`` decorated with
+``jax.jit`` / ``partial(jax.jit, ...)`` / ``pl.pallas_call``, or whose name
+is passed directly to a ``jax.jit(...)`` / ``pallas_call(...)`` call in the
+same file. Analysis is file-local and does not follow calls — a helper
+called FROM a jitted function is not scanned (annotate hot helpers with
+their own decorator, or pragma the call site).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..engine import FileContext, Finding, Rule, register
+
+_JIT_NAMES = {"jit", "pallas_call"}
+
+
+def _mentions_jit(expr: ast.AST) -> bool:
+    """Does a decorator / call-func expression refer to jax.jit or
+    pallas_call (possibly through functools.partial)?"""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and node.id in _JIT_NAMES:
+            return True
+        if isinstance(node, ast.Attribute) and node.attr in _JIT_NAMES:
+            return True
+    return False
+
+
+def jitted_defs(tree: ast.Module) -> List[ast.FunctionDef]:
+    """Every function definition that is traced: jit/pallas decorated, or
+    passed by name to a jit/pallas_call call somewhere in the file."""
+    wrapped_names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _mentions_jit(node.func):
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    wrapped_names.add(arg.id)
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if any(_mentions_jit(d) for d in node.decorator_list):
+            out.append(node)
+        elif node.name in wrapped_names:
+            out.append(node)
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+_IMPURE_MODULES = {"time", "random"}
+_IMPURE_RANDOM_ROOTS = {"np", "numpy"}
+
+
+@register
+class ImpureJitRule(Rule):
+    name = "impure-jit"
+    summary = ("no time.*/random.*/np.random.* inside a jitted or "
+               "pallas_call-wrapped function (baked in at trace time)")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in jitted_defs(ctx.tree):
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                culprit = self._impure(node.func)
+                if culprit:
+                    yield self.finding(
+                        ctx, node,
+                        f"'{culprit}' inside traced function "
+                        f"'{fn.name}' runs ONCE at trace time, not per "
+                        f"call — thread a jax PRNG key / pass the value "
+                        f"as an argument instead")
+
+    @staticmethod
+    def _impure(fn) -> Optional[str]:
+        if not isinstance(fn, ast.Attribute):
+            return None
+        if isinstance(fn.value, ast.Name):
+            if fn.value.id in _IMPURE_MODULES:
+                return f"{fn.value.id}.{fn.attr}"
+        if isinstance(fn.value, ast.Attribute) and \
+                isinstance(fn.value.value, ast.Name) and \
+                fn.value.value.id in _IMPURE_RANDOM_ROOTS and \
+                fn.value.attr == "random":
+            return f"{fn.value.value.id}.random.{fn.attr}"
+        return None
+
+
+# ---------------------------------------------------------------------------
+
+
+def _is_scalar_expr(expr: ast.AST) -> bool:
+    """Syntactically-a-Python-scalar: literals, arithmetic on literals, or
+    int()/float()/len()/bool() results."""
+    if isinstance(expr, ast.Constant):
+        return isinstance(expr.value, (int, float, bool))
+    if isinstance(expr, ast.UnaryOp):
+        return _is_scalar_expr(expr.operand)
+    if isinstance(expr, ast.BinOp):
+        return _is_scalar_expr(expr.left) or _is_scalar_expr(expr.right)
+    if isinstance(expr, ast.BoolOp):
+        return any(_is_scalar_expr(v) for v in expr.values)
+    if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Name):
+        return expr.func.id in ("int", "float", "len", "bool")
+    return False
+
+
+@register
+class ClosureCaptureRule(Rule):
+    name = "closure-capture"
+    summary = ("a Python scalar captured by closure in a jitted function "
+               "is frozen at trace time (recompilation/staleness hazard)")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in jitted_defs(ctx.tree):
+            enclosing = self._enclosing_fns(fn)
+            if not enclosing:
+                continue            # module-level def: globals, not closure
+            scalars = self._scalar_assignments(enclosing, fn)
+            if not scalars:
+                continue
+            bound = self._bound_names(fn)
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Name)
+                        and isinstance(node.ctx, ast.Load)
+                        and node.id in scalars and node.id not in bound):
+                    yield self.finding(
+                        ctx, node,
+                        f"jitted '{fn.name}' closes over Python scalar "
+                        f"'{node.id}' (assigned at line "
+                        f"{scalars[node.id]}) — it is frozen into the "
+                        f"compiled program; pass it as an argument (or "
+                        f"mark it static) so updates take effect")
+                    break           # one finding per captured name is plenty
+
+    @staticmethod
+    def _enclosing_fns(fn) -> List[ast.AST]:
+        out, node = [], fn
+        while hasattr(node, "parent"):
+            node = node.parent
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.append(node)
+        return out
+
+    @staticmethod
+    def _scalar_assignments(enclosing, fn) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        inside_fn = set(map(id, ast.walk(fn)))   # exclude the jitted subtree
+        for outer in enclosing:
+            for node in ast.walk(outer):
+                if id(node) in inside_fn:
+                    continue
+                if isinstance(node, ast.Assign) and \
+                        _is_scalar_expr(node.value):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            out[t.id] = node.lineno
+        return out
+
+    @staticmethod
+    def _bound_names(fn) -> Set[str]:
+        bound = {a.arg for a in fn.args.args + fn.args.kwonlyargs
+                 + fn.args.posonlyargs}
+        if fn.args.vararg:
+            bound.add(fn.args.vararg.arg)
+        if fn.args.kwarg:
+            bound.add(fn.args.kwarg.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, (ast.Store, ast.Del)):
+                bound.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                bound.add(node.name)
+        return bound
+
+
+# ---------------------------------------------------------------------------
+
+
+@register
+class InterpretLiteralRule(Rule):
+    name = "interpret-literal"
+    summary = ("hardcoded interpret=True outside tests ships the Pallas "
+               "interpreter to production")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if ctx.is_test:
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg == "interpret" and \
+                        isinstance(kw.value, ast.Constant) and \
+                        kw.value.value is True:
+                    yield self.finding(
+                        ctx, kw.value,
+                        "hardcoded 'interpret=True' — plumb the flag "
+                        "(resolved per-backend) instead of pinning the "
+                        "interpreter on")
+
+
+# ---------------------------------------------------------------------------
+
+
+@register
+class DonatedReuseRule(Rule):
+    name = "donated-reuse"
+    summary = ("an argument donated via donate_argnums is dead after the "
+               "call; reusing it reads freed device memory")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        donated = self._donating_callables(ctx.tree)
+        if not donated:
+            return
+        for scope in ast.walk(ctx.tree):
+            if not isinstance(scope, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.Module)):
+                continue
+            yield from self._scan_scope(ctx, scope, donated)
+
+    # -- which names are donate_argnums-jitted callables --------------------
+
+    @staticmethod
+    def _donating_callables(tree) -> Dict[str, Tuple[int, ...]]:
+        out: Dict[str, Tuple[int, ...]] = {}
+
+        def argnums(call: ast.Call) -> Optional[Tuple[int, ...]]:
+            for kw in call.keywords:
+                if kw.arg != "donate_argnums":
+                    continue
+                v = kw.value
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    return (v.value,)
+                if isinstance(v, (ast.Tuple, ast.List)):
+                    vals = []
+                    for e in v.elts:
+                        if isinstance(e, ast.Constant) and \
+                                isinstance(e.value, int):
+                            vals.append(e.value)
+                    return tuple(vals) or None
+            return None
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    _mentions_jit(node.value.func):
+                nums = argnums(node.value)
+                if nums:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            out[t.id] = nums
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) and _mentions_jit(dec):
+                        nums = argnums(dec)
+                        if nums:
+                            out[node.name] = nums
+        return out
+
+    # -- donated-name liveness inside one scope -----------------------------
+
+    def _scan_scope(self, ctx, scope, donated) -> Iterator[Finding]:
+        body_nodes = self._scope_nodes(scope)
+        for node in body_nodes:
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in donated):
+                continue
+            rebound = self._stmt_targets(node)
+            for pos in donated[node.func.id]:
+                if pos >= len(node.args):
+                    continue
+                arg = node.args[pos]
+                if not isinstance(arg, ast.Name) or arg.id in rebound:
+                    continue
+                use = self._later_use(body_nodes, arg.id, node.lineno)
+                if use is not None:
+                    yield Finding(
+                        self.name, ctx.path, use.lineno, use.col_offset,
+                        f"'{arg.id}' was donated to '{node.func.id}' at "
+                        f"line {node.lineno} (donate_argnums) — its buffer "
+                        f"is freed; rebind the result instead of reusing "
+                        f"the input")
+
+    @staticmethod
+    def _scope_nodes(scope) -> List[ast.AST]:
+        """Nodes belonging to ``scope`` itself — nested function bodies are
+        their own scope and are excluded (a module-level donated call must
+        not be related to same-named uses inside unrelated functions)."""
+        out: List[ast.AST] = []
+        stack: List[ast.AST] = [scope]
+        while stack:
+            node = stack.pop()
+            out.append(node)
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    continue     # nested defs are scanned as their own scope
+                stack.append(child)
+        return out
+
+    @staticmethod
+    def _stmt_targets(call: ast.Call) -> Set[str]:
+        """Names the statement containing ``call`` assigns to (the
+        ``x = f(x)`` donation idiom rebinds the name)."""
+        node = call
+        while hasattr(node, "parent"):
+            parent = node.parent
+            if isinstance(parent, ast.Assign):
+                out: Set[str] = set()
+                for t in parent.targets:
+                    for sub in ast.walk(t):
+                        if isinstance(sub, ast.Name):
+                            out.add(sub.id)
+                return out
+            if isinstance(parent, (ast.stmt, ast.Module)):
+                return set()
+            node = parent
+        return set()
+
+    @staticmethod
+    def _later_use(body_nodes, name: str, after_line: int):
+        """First Load of ``name`` after ``after_line``, unless a Store
+        rebinds it first."""
+        first_load, first_store = None, None
+        for node in body_nodes:
+            if not isinstance(node, ast.Name) or node.id != name:
+                continue
+            if node.lineno <= after_line:
+                continue
+            if isinstance(node.ctx, ast.Load):
+                if first_load is None or node.lineno < first_load.lineno:
+                    first_load = node
+            else:
+                if first_store is None or node.lineno < first_store.lineno:
+                    first_store = node
+        if first_load is None:
+            return None
+        if first_store is not None and \
+                first_store.lineno <= first_load.lineno:
+            return None
+        return first_load
