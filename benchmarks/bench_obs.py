@@ -1,0 +1,157 @@
+"""Observability overhead + communication accounting benchmark.
+
+Three questions the flight recorder must answer about itself:
+
+  1. what does a DISABLED tracer cost on the hot path (the no-op span —
+     this is the price every serve request pays all the time);
+  2. what does an ENABLED tracer / a metric update cost (the opt-in price);
+  3. what does one ADMM iteration actually move over the wire, per
+     transport (the ``CommLedger`` numbers the paper's §4.2 cost analysis
+     predicts analytically).
+
+Plus the phase breakdown of an async drain (pack / dispatch / device /
+resolve span means) measured from a live traced engine — the numbers
+``benchmarks/run.py`` lifts into the committed BENCH json as derived
+fields (``bytes_per_iter``, ``flush_phase_ms``).
+
+Rows follow the harness convention (name, us_per_call, derived).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KernelSpec, build_setup, oos
+from repro.core.solver import run_chunked
+from repro.core.topology import ring
+from repro.data import kpca_dataset, node_dataset
+from repro.obs import metrics, trace
+from repro.obs.comm import CommLedger
+from repro.serve import KpcaEngine, KpcaServeConfig
+
+SPEC = KernelSpec(kind="rbf")
+
+
+def _time_span_loop(n: int) -> float:
+    """us per ``with trace.span(...)`` round trip."""
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with trace.span("bench.overhead"):
+            pass
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _span_overhead_rows(n: int = 50_000):
+    rows = []
+    was = trace.active()
+    trace.disable()
+    rows.append(("obs/span_disabled", _time_span_loop(n),
+                 "noop-singleton;per-call"))
+    t = trace.enable(capacity=4096)          # ring absorbs n >> capacity
+    rows.append(("obs/span_enabled", _time_span_loop(n),
+                 f"recorded={t.n_recorded};dropped={t.n_dropped}"))
+    trace.install(was)                       # hand back an outer --trace-out
+    c = metrics.counter("bench_obs_overhead_total", "bench-only")
+    t0 = time.perf_counter()
+    for _ in range(n):
+        c.inc()
+    rows.append(("obs/counter_inc", (time.perf_counter() - t0) / n * 1e6,
+                 "locked-counter;per-call"))
+    return rows
+
+
+def _flush_phase_rows(m: int = 64):
+    """Mean per-drain span durations from a live traced async engine."""
+    x = jnp.asarray(kpca_dataset(256, m=m, seed=0))
+    model = oos.fit_central(x, SPEC, n_components=2, center=True)
+    eng = KpcaEngine(model, KpcaServeConfig(
+        max_batch=64, min_bucket=8, flush_max_wait_s=0.002))
+    for b in eng.cfg.buckets():
+        eng.project_many([np.zeros((b, m), np.float32)])
+    eng.stats = type(eng.stats)()
+
+    was = trace.active()
+    tr = was if was is not None else trace.enable()
+    rng = np.random.default_rng(0)
+    reqs = [rng.normal(size=(int(q), m)).astype(np.float32)
+            for q in rng.integers(1, 33, size=96)]
+    t0 = time.perf_counter()
+    with eng:
+        futs = []
+
+        def submitter(lo):
+            for r in reqs[lo::2]:
+                futs.append(eng.submit(r))
+
+        threads = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for f in list(futs):
+            f.result(timeout=60.0)
+    wall = time.perf_counter() - t0
+
+    def mean_ms(name):
+        d = tr.durations(name)
+        return float(np.mean(d)) * 1e3 if d else 0.0
+
+    phases = {p: mean_ms(f"serve.{p}")
+              for p in ("pack", "dispatch", "device", "resolve")}
+    if was is None:
+        trace.disable()
+    derived = ";".join(f"flush_{p}_ms={v:.4f}" for p, v in phases.items())
+    return [("obs/flush_phases", wall / len(reqs) * 1e6,
+             derived + f";flushes={eng.stats.n_flushes}")]
+
+
+def _comm_rows():
+    """Measured per-iteration wire traffic, dense reference transport (and
+    the SPMD ring when enough devices are exposed)."""
+    rows = []
+    nodes, _ = node_dataset(n_nodes=8, n_per_node=16, m=12, seed=0)
+    setup = build_setup(jnp.asarray(nodes), ring(8, hops=2), SPEC)
+    led = CommLedger()
+    t0 = time.perf_counter()
+    for _ in run_chunked(setup, n_iters=8, chunk=4, ledger=led):
+        pass
+    dt = time.perf_counter() - t0
+    p = led.per_iter
+    rows.append(("obs/comm_dense", dt / 8 * 1e6,
+                 f"bytes_per_iter={p.bytes};msgs_per_iter={p.messages};"
+                 f"scope=network;iters={led.iterations}"))
+
+    if jax.device_count() >= 4:
+        from jax.sharding import Mesh
+        from repro.core.dkpca import dkpca_distributed
+        mesh = Mesh(np.array(jax.devices()[:4]).reshape(4, 1),
+                    ("data", "model"))
+        led2 = CommLedger()
+        x = jnp.asarray(node_dataset(n_nodes=4, n_per_node=16, m=12,
+                                     seed=1)[0])
+        t0 = time.perf_counter()
+        dkpca_distributed(x, mesh, hops=1, n_iters=8, ledger=led2)
+        dt = time.perf_counter() - t0
+        p = led2.per_iter
+        rows.append((
+            "obs/comm_ring", dt / 8 * 1e6,
+            f"bytes_per_iter={p.bytes};msgs_per_iter={p.messages};"
+            f"collectives_per_iter={p.collectives};scope=per-node;"
+            f"setup_bytes={led2.setup.bytes}"))
+    return rows
+
+
+def bench_obs(m: int = 64):
+    return _span_overhead_rows() + _flush_phase_rows(m=m) + _comm_rows()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in bench_obs():
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

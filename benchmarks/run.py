@@ -33,9 +33,10 @@ sys.path.insert(0, _ROOT)                      # `python benchmarks/run.py ...`
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 ALL_SUITES = ["fig3", "fig4", "fig5", "rt", "kernels", "roofline", "serve",
-              "shard", "async"]
-QUICK_DIM_SUITES = ("fig3", "fig4", "fig5", "rt", "serve", "shard", "async")
-SMOKE_SUITES = ["kernels", "serve", "shard", "async"]
+              "shard", "async", "obs"]
+QUICK_DIM_SUITES = ("fig3", "fig4", "fig5", "rt", "serve", "shard", "async",
+                    "obs")
+SMOKE_SUITES = ["kernels", "serve", "shard", "async", "obs"]
 
 
 def _parse_args():
@@ -56,7 +57,41 @@ def _parse_args():
     ap.add_argument("--host-devices", type=int, default=4,
                     help="host CPU devices to expose for the shard suite "
                          "(0 = leave XLA_FLAGS untouched)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable span tracing across every suite; write "
+                         "Chrome-trace JSON (Perfetto) to PATH at exit")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the final metrics snapshot (JSON) to PATH")
     return ap.parse_args()
+
+
+def _derived_fields(results) -> dict:
+    """Lift headline observability numbers out of the obs-suite rows'
+    ``derived`` strings into top-level JSON fields, so the committed
+    BENCH_<n>.json tracks them as scalars across PRs."""
+    kv = {}
+    for row in results:
+        if not row["name"].startswith("obs/"):
+            continue
+        for part in row["derived"].split(";"):
+            if "=" in part:
+                k, v = part.split("=", 1)
+                kv[(row["name"], k)] = v
+    out = {}
+    if ("obs/comm_dense", "bytes_per_iter") in kv:
+        out["bytes_per_iter_dense"] = int(
+            kv[("obs/comm_dense", "bytes_per_iter")])
+    if ("obs/comm_ring", "bytes_per_iter") in kv:
+        out["bytes_per_iter_ring"] = int(
+            kv[("obs/comm_ring", "bytes_per_iter")])
+    for phase in ("pack", "dispatch", "device", "resolve"):
+        key = ("obs/flush_phases", f"flush_{phase}_ms")
+        if key in kv:
+            out[f"flush_{phase}_ms"] = float(kv[key])
+    for row in results:
+        if row["name"] == "obs/span_disabled":
+            out["span_disabled_us"] = round(row["us_per_call"], 4)
+    return out
 
 
 def main() -> None:
@@ -87,10 +122,15 @@ def main() -> None:
                                        bench_similarity_vs_neighbors,
                                        bench_similarity_vs_nodes,
                                        bench_similarity_vs_samples)
+    from benchmarks.bench_obs import bench_obs
     from benchmarks.bench_roofline import bench_roofline_summary
     from benchmarks.bench_serve_async import bench_serve_async
     from benchmarks.bench_serve_kpca import (bench_serve_kpca,
                                              bench_serve_sharded)
+    from repro.obs import metrics, trace
+
+    if args.trace_out:
+        trace.enable()
 
     suites = {
         "fig3": bench_similarity_vs_nodes,
@@ -102,6 +142,7 @@ def main() -> None:
         "serve": bench_serve_kpca,
         "shard": bench_serve_sharded,
         "async": bench_serve_async,
+        "obs": bench_obs,
     }
 
     assert list(suites) == ALL_SUITES, "keep ALL_SUITES in sync"
@@ -118,11 +159,21 @@ def main() -> None:
 
     json_path = args.json or ("bench-smoke.json" if args.smoke else None)
     payload = {"suites": names, "rows": results}
+    derived = _derived_fields(results)
+    if derived:
+        payload["derived"] = derived
     for path in filter(None, {json_path, args.out}):
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
         print(f"wrote {path}", file=sys.stderr)
+    if args.trace_out:
+        n = trace.export(args.trace_out)
+        print(f"wrote {n} trace events -> {args.trace_out}", file=sys.stderr)
+    if args.metrics_out:
+        metrics.write_json(args.metrics_out)
+        print(f"wrote metrics snapshot -> {args.metrics_out}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -49,6 +49,7 @@ from .kernels_math import KernelSpec, gram, psd_jitter_eigh, resolve_gamma
 from .rho import RhoSchedule
 from .solver import AdmmState, RingComm, SolverOps, admm_step
 from ..distributed.compat import pvary, shard_map
+from ..obs.comm import CommLedger
 from .topology import ring_shifts
 
 
@@ -88,6 +89,7 @@ def dkpca_distributed(
     use_pallas: bool = False,
     message_dtype=None,
     unroll_iters: bool = False,
+    ledger: Optional[CommLedger] = None,
 ) -> DistDkpcaResult:
     """Run decentralized kPCA with one network node per device.
 
@@ -102,6 +104,9 @@ def dkpca_distributed(
     b0/t0: resume a run from iteration ``t0`` with duals ``b0`` (J, N, S)
     — pass the previous call's ``result.b``/``result.alpha``; the rho2
     schedule is evaluated at the global iteration indices [t0, t0+n_iters).
+    ledger: a ``repro.obs.CommLedger`` accounting PER-NODE wire traffic —
+    setup-phase exchanges land in ``ledger.setup``, the iterate phase in
+    ``ledger.per_iter`` (recorded at trace time; see repro.obs.comm).
     """
     axis_names = tuple(axis_names)
     j_nodes = int(np.prod([mesh.shape[a] for a in axis_names]))
@@ -151,7 +156,8 @@ def dkpca_distributed(
                  rho_self=rho_self, include_self=include_self,
                  project=project, n_iters=n_iters, t0=t0,
                  local_init=local_init, use_pallas=use_pallas,
-                 message_dtype=message_dtype, unroll_iters=unroll_iters)
+                 message_dtype=message_dtype, unroll_iters=unroll_iters,
+                 ledger=ledger)
     shmap = shard_map(
         fn, mesh=mesh,
         in_specs=(P(axis_names, None, None), P(axis_names, None),
@@ -165,6 +171,8 @@ def dkpca_distributed(
     with mesh:
         alpha, b_f, hist, res, zn = jax.jit(shmap)(
             x_nodes, alpha0, b0, g, rho2_arr)
+    if ledger is not None:
+        ledger.add_iterations(n_iters)
     return DistDkpcaResult(alpha=alpha, alpha_hist=hist, primal_residual=res,
                            znorm2_hist=zn, b=b_f)
 
@@ -172,7 +180,7 @@ def dkpca_distributed(
 def _node_fn(x_blk, a_blk, b_blk, g, rho2_arr, *, axes, j_nodes, offsets,
              rev_static, s_slots, spec, center, rho_self, include_self,
              project, n_iters, t0, local_init=False, use_pallas=False,
-             message_dtype=None, unroll_iters=False):
+             message_dtype=None, unroll_iters=False, ledger=None):
     """Per-node SPMD program. x_blk: (1, N, M); a_blk: (1, N);
     b_blk: (1, N, S).
 
@@ -193,9 +201,20 @@ def _node_fn(x_blk, a_blk, b_blk, g, rho2_arr, *, axes, j_nodes, offsets,
     # ---- setup: exchange raw data with r-hop neighbors (paper Alg. 1) ----
     xs = [x] + [_ring_recv(x, axes, o, j_nodes) for o in offsets]
     xs = jnp.stack(xs)                                     # (S, N, M)
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if ledger is not None:
+        ledger.record_exchange(len(offsets) * x.size * itemsize, len(offsets))
 
     # ---- global centering statistics: one ring sweep + pmean -------------
     if center == "global":
+        if ledger is not None:
+            # The sweep's scan body traces once but represents j_nodes
+            # single-hop rotations of x, plus one scalar pmean and the
+            # m_slots neighbor shifts — recorded explicitly here since
+            # _ring_recv has no per-call hook inside the scan.
+            ledger.record_exchange(j_nodes * x.size * itemsize, j_nodes)
+            ledger.record_collective(jnp.dtype(jnp.float32).itemsize)
+            ledger.record_exchange(len(offsets) * n * itemsize, len(offsets))
         def sweep(carry, _):
             rot, macc, mubar = carry
             kb = gram_fn(x, rot)                           # (N, N)
@@ -238,7 +257,7 @@ def _node_fn(x_blk, a_blk, b_blk, g, rho2_arr, *, axes, j_nodes, offsets,
          jnp.ones((n_nbr,), jnp.float32)])
     ops = SolverOps(kcross=kcross, k=k_loc, lam=lam, vec=vec, mask=maskf)
     comm = RingComm(axes, j_nodes, offsets, rev_static,
-                    message_dtype=message_dtype)
+                    message_dtype=message_dtype, ledger=ledger)
 
     def iteration(carry, t):
         st = carry

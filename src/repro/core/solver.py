@@ -38,8 +38,11 @@ from typing import Callable, Iterator, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .rho import RhoSchedule
+from ..obs import metrics, trace
+from ..obs.comm import CommLedger
 
 
 # ---- state ----------------------------------------------------------------
@@ -111,10 +114,22 @@ jax.tree_util.register_pytree_node(
 
 class DenseComm:
     """All nodes in one process: exchange == advanced indexing by the
-    (src, rsl) slot routing tables; per-node math is vmapped over axis 0."""
+    (src, rsl) slot routing tables; per-node math is vmapped over axis 0.
 
-    def __init__(self, src: jax.Array, rsl: jax.Array):
+    Communication accounting (``repro.obs.comm``): the routing tables may
+    be tracers here, so the off-node entry count — the number of directed
+    edges an exchange actually moves data over — is computed host-side by
+    the driver and passed in as ``wire_entries``; each traced ``exchange``
+    then reports NETWORK-WIDE bytes (every edge, payload only) into the
+    ledger.
+    """
+
+    def __init__(self, src: jax.Array, rsl: jax.Array,
+                 ledger: Optional[CommLedger] = None,
+                 wire_entries: int = 0):
         self.src, self.rsl = src, rsl
+        self.ledger = ledger
+        self.wire_entries = wire_entries
 
     def local(self, fn):
         return jax.vmap(fn)
@@ -122,6 +137,10 @@ class DenseComm:
     def exchange(self, cols: jax.Array) -> jax.Array:
         """cols: (J, S, N) per-out-slot columns -> (J, S, N) where in-slot s
         of node j receives cols[src[j,s], rsl[j,s]]."""
+        if self.ledger is not None:
+            payload = cols.shape[-1] * jnp.dtype(cols.dtype).itemsize
+            self.ledger.record_exchange(self.wire_entries * payload,
+                                        self.wire_entries)
         return cols[self.src, self.rsl]
 
     def all_sum(self, x):
@@ -137,16 +156,23 @@ class RingComm:
 
     message_dtype (e.g. bfloat16) casts neighbor payloads before the wire
     (halving ICI bytes); the self slot and all accumulation stay fp32.
+
+    Communication accounting (``repro.obs.comm``): every ppermute and
+    psum/pmax reports its WIRE payload (post-``message_dtype`` cast) into
+    the ledger at trace time. The recorded profile is per NODE — this
+    class runs inside shard_map, one node per device — so multiply by J
+    for network totals.
     """
 
     def __init__(self, axes: Sequence[str], n_nodes: int,
                  offsets: Sequence[int], rev_slots: Sequence[int],
-                 message_dtype=None):
+                 message_dtype=None, ledger: Optional[CommLedger] = None):
         self.axes = tuple(axes)
         self.n_nodes = n_nodes
         self.offsets = tuple(offsets)
         self.rev_slots = tuple(rev_slots)
         self.message_dtype = message_dtype
+        self.ledger = ledger
 
     def local(self, fn):
         return fn
@@ -157,6 +183,9 @@ class RingComm:
                 for m in range(self.n_nodes)]
         if self.message_dtype is not None:
             v = v.astype(self.message_dtype)
+        if self.ledger is not None:
+            self.ledger.record_exchange(
+                v.size * jnp.dtype(v.dtype).itemsize)
         r = jax.lax.ppermute(v, self.axes, perm)
         return r.astype(jnp.float32) if self.message_dtype is not None else r
 
@@ -170,9 +199,15 @@ class RingComm:
         return jnp.stack(outs)
 
     def all_sum(self, x):
+        if self.ledger is not None:
+            self.ledger.record_collective(
+                jnp.size(x) * jnp.dtype(jnp.result_type(x)).itemsize)
         return jax.lax.psum(x, self.axes)
 
     def all_max(self, x):
+        if self.ledger is not None:
+            self.ledger.record_collective(
+                jnp.size(x) * jnp.dtype(jnp.result_type(x)).itemsize)
         return jax.lax.pmax(x, self.axes)
 
 
@@ -210,6 +245,11 @@ def admm_step(ops: SolverOps, comm, state: AdmmState, rho_slots: jax.Array,
       produced by this iteration; the residual is the global
       ||K alpha 1 - G||_F over valid slots.
     """
+    ledger = getattr(comm, "ledger", None)
+    if ledger is not None:
+        # trace-time bracket: everything the transport records until
+        # end_iteration is exactly one iteration's traffic (repro.obs.comm)
+        ledger.begin_iteration()
     alpha, b = state.alpha, state.b
 
     # ---- message round 1: K^-1 B columns + alpha --------------------------
@@ -274,6 +314,8 @@ def admm_step(ops: SolverOps, comm, state: AdmmState, rho_slots: jax.Array,
 
     new_state = AdmmState(alpha=alpha_n, b=b_n, g=g, znorm2=znorm2,
                           t=state.t + 1, rho=rho_slots)
+    if ledger is not None:
+        ledger.end_iteration()
     return new_state, res
 
 
@@ -306,6 +348,10 @@ class ChunkResult:
     rho_hist: jax.Array
     ckpt_path: Optional[str] = None
     stopped: bool = False          # residual-based early stop fired here
+    # communication accounting for THIS chunk (0 without a ledger):
+    # point-to-point payload bytes / messages moved by its iterations
+    comm_bytes: int = 0
+    comm_messages: int = 0
 
 
 # ---- refresh cadence policies ---------------------------------------------
@@ -389,10 +435,16 @@ def _slot_rho_dense(mask: jax.Array, rho1, rho2) -> jax.Array:
     return r * mask
 
 
-@partial(jax.jit, static_argnames=("n_steps", "project"))
+@partial(jax.jit, static_argnames=("n_steps", "project", "ledger",
+                                   "wire_entries"))
 def _dense_chunk(ops: SolverOps, src, rsl, state: AdmmState,
-                 rho1_arr, rho2_arr, n_steps: int, project: str):
-    comm = DenseComm(src, rsl)
+                 rho1_arr, rho2_arr, n_steps: int, project: str,
+                 ledger: Optional[CommLedger] = None,
+                 wire_entries: int = 0):
+    # ledger/wire_entries are static: the ledger records at trace time
+    # (hashed by identity — one ledger per run_chunked call, so at most
+    # one extra compilation per run vs the unledgered path).
+    comm = DenseComm(src, rsl, ledger=ledger, wire_entries=wire_entries)
 
     def step(carry, i):
         st = carry
@@ -438,7 +490,8 @@ def run_chunked(setup, n_iters: int = 30, chunk: int = 10,
                 state: Optional[AdmmState] = None,
                 tol: float = 0.0,
                 ckpt_dir: Optional[str] = None,
-                ckpt_every: int = 1) -> Iterator[ChunkResult]:
+                ckpt_every: int = 1,
+                ledger: Optional[CommLedger] = None) -> Iterator[ChunkResult]:
     """Resumable chunked driver for the reference path (Alg. 1).
 
     Scans ``chunk`` iterations per jitted call and yields a ``ChunkResult``
@@ -475,6 +528,9 @@ def run_chunked(setup, n_iters: int = 30, chunk: int = 10,
       tol: early stop when the primal residual drops below this (0 = off).
       ckpt_dir: checkpoint the state every ``ckpt_every`` chunks (and at the
         final chunk) via ``save_state``.
+      ledger: a ``repro.obs.CommLedger`` to account per-iteration
+        communication into (network-wide bytes for this dense transport);
+        each yielded chunk then carries ``comm_bytes``/``comm_messages``.
 
     Yields:
       ``ChunkResult`` per chunk; generator ends after the final chunk or
@@ -493,25 +549,67 @@ def run_chunked(setup, n_iters: int = 30, chunk: int = 10,
     ops, comm = dense_parts(setup)
     rho1_eff = float(rho1) if setup.include_self else 0.0
 
+    wire_entries = 0
+    if ledger is not None:
+        # Off-node routing entries = directed edges one exchange moves
+        # data over: slot s of node j is remote iff its source is another
+        # node AND the slot is valid. Host-side (setup tables are
+        # concrete); DenseComm multiplies by payload size at trace time.
+        src_np = np.asarray(setup.src)
+        mask_np = np.asarray(setup.mask).astype(bool)
+        own = np.arange(src_np.shape[0], dtype=src_np.dtype)[:, None]
+        wire_entries = int(np.sum((src_np != own) & mask_np))
+
+    m_iters = metrics.counter(
+        "solver_iterations_total", "ADMM iterations executed",
+        transport="dense")
+    m_chunks = metrics.counter(
+        "solver_chunks_total", "driver chunks yielded", transport="dense")
+    m_bytes = metrics.counter(
+        "comm_bytes_total", "point-to-point ADMM payload bytes",
+        transport="dense")
+    m_res = metrics.gauge(
+        "solver_primal_residual", "last observed primal residual")
+
     t = int(state.t)
     chunk_idx = 0
     while t < n_iters:
         c = min(chunk, n_iters - t)
-        rho2_arr = jnp.asarray([rho2_fn(tt) for tt in range(t, t + c)],
-                               jnp.float32)
+        with trace.span("solver.rho2", t=t, steps=c):
+            rho2_arr = jnp.asarray([rho2_fn(tt) for tt in range(t, t + c)],
+                                   jnp.float32)
         rho1_arr = jnp.full((c,), rho1_eff, jnp.float32)
-        state, ahist, lhist, rhist = _dense_chunk(
-            ops, comm.src, comm.rsl, state, rho1_arr, rho2_arr, c, project)
+        # The span times trace + dispatch; execution is async (the device
+        # is only awaited where a host value is read, e.g. the residual).
+        with trace.span("solver.step", t=t, steps=c):
+            state, ahist, lhist, rhist = _dense_chunk(
+                ops, comm.src, comm.rsl, state, rho1_arr, rho2_arr, c,
+                project, ledger=ledger, wire_entries=wire_entries)
         t += c
         chunk_idx += 1
-        stopped = tol > 0.0 and float(rhist[-1]) < tol
+        comm_bytes = comm_msgs = 0
+        if ledger is not None:
+            ledger.add_iterations(c)
+            per = ledger.per_iter
+            comm_bytes, comm_msgs = per.bytes * c, per.messages * c
+            m_bytes.inc(comm_bytes)
+        m_iters.inc(c)
+        m_chunks.inc()
+        stopped = False
+        if tol > 0.0:
+            with trace.span("solver.residual", t=t):
+                res_last = float(rhist[-1])
+            m_res.set(res_last)
+            stopped = res_last < tol
         ckpt_path = None
         if ckpt_dir and (chunk_idx % ckpt_every == 0 or t >= n_iters
                          or stopped):
-            ckpt_path = save_state(ckpt_dir, state)
+            with trace.span("solver.checkpoint", t=t):
+                ckpt_path = save_state(ckpt_dir, state)
         yield ChunkResult(state=state, alpha_hist=ahist, lagrangian=lhist,
                           primal_residual=rhist, rho_hist=rho2_arr,
-                          ckpt_path=ckpt_path, stopped=stopped)
+                          ckpt_path=ckpt_path, stopped=stopped,
+                          comm_bytes=comm_bytes, comm_messages=comm_msgs)
         if stopped:
             return
 

@@ -23,11 +23,13 @@ import numpy as np
 from ..core import oos
 from ..core.kernels_math import KernelSpec
 from ..data import kpca_dataset
-from ..serve import KpcaEngine, KpcaServeConfig, QueueFullError
+from ..obs.cli import add_obs_args, obs_session
+from ..serve import KpcaEngine, KpcaServeConfig, ModelHandle, QueueFullError
 
 
 def main():
     ap = argparse.ArgumentParser()
+    add_obs_args(ap)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny dims for a fast sanity run")
     ap.add_argument("--n-train", type=int, default=512)
@@ -47,7 +49,11 @@ def main():
     args = ap.parse_args()
     if args.smoke:
         args.n_train, args.m, args.requests = 128, 16, 16
+    with obs_session(args):
+        _run(args)
 
+
+def _run(args):
     x = jnp.asarray(kpca_dataset(args.n_train, m=args.m, seed=0))
     model = oos.fit_central(x, KernelSpec(kind="rbf"),
                             n_components=args.components, center=True)
@@ -55,7 +61,8 @@ def main():
                           queue_factor=args.queue_factor,
                           admission=args.admission,
                           flush_max_wait_s=args.flush_wait_ms / 1e3)
-    eng = KpcaEngine(model, cfg)
+    handle = ModelHandle(model)
+    eng = KpcaEngine(handle, cfg)
     for b in cfg.buckets():                        # warm every bucket
         eng.project_many([np.zeros((b, args.m), np.float32)])
     eng.stats = type(eng.stats)()
@@ -81,6 +88,11 @@ def main():
                    for i in range(args.submitters)]
         for t in threads:
             t.start()
+        # One live publish while submitters hammer: same coefficients, so
+        # scores are unchanged, but the refresh -> atomic-swap path runs
+        # under real load (in-flight flushes finish on the old version,
+        # the next drain picks up the new one).
+        version = handle.refresh(model.coefs)
         for t in threads:
             t.join()
         done = [f.result(timeout=60.0) for fs in futures for f in fs]
@@ -94,7 +106,8 @@ def main():
           f"-> {st.n_queries / max(dt, 1e-9):.0f} q/s wall")
     print(f"flushes={st.n_flushes} compiles={st.n_compiles} "
           f"pad_rows={st.n_padded} "
-          f"pad_frac={st.n_padded / max(st.n_queries + st.n_padded, 1):.2f}")
+          f"pad_frac={st.n_padded / max(st.n_queries + st.n_padded, 1):.2f} "
+          f"model_version={version}")
     print(f"compute p50={p50 * 1e3:.2f}ms p99={p99 * 1e3:.2f}ms  "
           f"queue-wait p50={np.percentile(waits, 50) * 1e3:.2f}ms "
           f"p99={np.percentile(waits, 99) * 1e3:.2f}ms")

@@ -16,6 +16,8 @@ from ..configs import get_config
 from ..data.tokens import TokenStream
 from ..distributed.sharding import default_rules
 from ..models import build_model
+from ..obs import trace
+from ..obs.cli import add_obs_args, obs_session
 from ..optim import AdamWConfig, cosine_with_warmup
 from ..train import TrainConfig, activation_probe, train
 from .mesh import make_mesh
@@ -23,6 +25,7 @@ from .mesh import make_mesh
 
 def main():
     ap = argparse.ArgumentParser()
+    add_obs_args(ap)
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
@@ -57,8 +60,10 @@ def main():
                        probe_every=args.probe_every)
     probe = (lambda state, batch: activation_probe(
         state["params"], batch, mesh=mesh)) if args.probe_every else None
-    state, history = train(model, opt, data, tcfg, mesh=mesh, rules=rules,
-                           probe_fn=probe)
+    with obs_session(args):
+        with trace.span("train.run", arch=args.arch, steps=args.steps):
+            state, history = train(model, opt, data, tcfg, mesh=mesh,
+                                   rules=rules, probe_fn=probe)
     print(f"final loss: {history['loss'][-1]:.4f} "
           f"(first: {history['loss'][0]:.4f}); "
           f"straggler flags: {history['straggler_flags']}")

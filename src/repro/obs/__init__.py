@@ -1,0 +1,19 @@
+"""Observability layer: span tracing, metrics, communication accounting.
+
+Three independent, dependency-free (stdlib-only, no jax) facilities:
+
+  * ``repro.obs.trace`` — ring-buffer span tracer with Chrome-trace/
+    Perfetto export; zero-cost no-op while disabled.
+  * ``repro.obs.metrics`` — process-wide registry of counters/gauges/
+    histograms; JSON snapshot + Prometheus text exposition.
+  * ``repro.obs.comm`` — trace-time per-iteration communication
+    accounting for the ADMM transports (``CommLedger``).
+
+See docs/OBSERVABILITY.md for the span taxonomy, the metric catalog, and
+how to open an exported trace in Perfetto.
+"""
+
+from . import metrics, trace
+from .comm import CommLedger, CommProfile
+
+__all__ = ["CommLedger", "CommProfile", "metrics", "trace"]

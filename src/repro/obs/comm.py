@@ -1,0 +1,123 @@
+"""Per-iteration communication accounting for the ADMM transports.
+
+The paper's headline iteration cost is O(|Omega_j| N) numbers moved per
+node per iteration (§4.2); COKE-style censoring policies and the
+communication-bounded fits of Balcan et al. make decisions from exactly
+this quantity. ``CommLedger`` measures it from the transports themselves
+instead of re-deriving it on paper:
+
+  * ``repro.core.solver.DenseComm`` / ``RingComm`` accept a ledger and
+    report every ``exchange`` (bytes + message count) and collective
+    (psum/pmax payload bytes) into it;
+  * ``repro.core.solver.admm_step`` brackets its body with
+    ``begin_iteration``/``end_iteration``, so everything recorded in
+    between is exactly ONE iteration's traffic.
+
+Counting happens at **trace time**: jax traces the step body once per
+compilation (``lax.scan`` traces its body once regardless of length), so
+the Python-side hooks fire once per iteration *shape*, not once per
+executed iteration — zero per-step runtime overhead, and the recorded
+profile is the per-iteration cost by construction. The driver then tells
+the ledger how many iterations actually ran (``add_iterations``) to get
+cumulative totals. Traffic recorded outside an iteration bracket (the
+setup phase's raw-data exchange and centering sweep in
+``repro.core.dkpca``) accumulates into the one-off ``setup`` profile.
+
+Scope semantics differ by transport and are part of the contract:
+``DenseComm`` simulates the whole network in one process, so its profile
+counts **network-wide** bytes (every directed edge); ``RingComm`` runs as
+one node per device under shard_map, so its profile counts **one node's**
+egress — multiply by J for the network total. Both count payload bytes
+only (no framing / protocol overhead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class CommProfile:
+    """Accumulated traffic for one accounting window (an iteration, or
+    the setup phase)."""
+
+    bytes: int = 0             # point-to-point payload bytes
+    messages: int = 0          # point-to-point sends (ppermute / edge)
+    collectives: int = 0       # psum/pmax/pmean invocations
+    collective_bytes: int = 0  # their payload bytes
+
+    def add_exchange(self, nbytes: int, n_messages: int = 1) -> None:
+        self.bytes += int(nbytes)
+        self.messages += int(n_messages)
+
+    def add_collective(self, nbytes: int) -> None:
+        self.collectives += 1
+        self.collective_bytes += int(nbytes)
+
+    def scaled(self, n: int) -> "CommProfile":
+        return CommProfile(self.bytes * n, self.messages * n,
+                           self.collectives * n, self.collective_bytes * n)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class CommLedger:
+    """Trace-time communication recorder shared by one solver run.
+
+    Attach via ``repro.core.solver.run_chunked(ledger=...)`` (dense
+    reference path) or ``repro.core.dkpca.dkpca_distributed(ledger=...)``
+    (SPMD ring path); read ``per_iter`` / ``setup`` / ``totals()`` after.
+    Not thread-safe: tracing and the driver loop run on one thread (the
+    same contract as the driver itself, ``run_chunked`` docstring).
+    """
+
+    def __init__(self):
+        self.per_iter = CommProfile()   # last traced iteration's profile
+        self.setup = CommProfile()      # one-off (outside any iteration)
+        self.iterations = 0             # iterations actually executed
+        self._active: Optional[CommProfile] = None
+
+    # -- hooks called by the transports (at trace time) ---------------------
+
+    def begin_iteration(self) -> None:
+        self._active = CommProfile()
+
+    def end_iteration(self) -> None:
+        if self._active is not None:
+            self.per_iter = self._active
+            self._active = None
+
+    def record_exchange(self, nbytes: int, n_messages: int = 1) -> None:
+        tgt = self._active if self._active is not None else self.setup
+        tgt.add_exchange(nbytes, n_messages)
+
+    def record_collective(self, nbytes: int) -> None:
+        tgt = self._active if self._active is not None else self.setup
+        tgt.add_collective(nbytes)
+
+    # -- host-side bookkeeping ----------------------------------------------
+
+    def add_iterations(self, n: int) -> None:
+        self.iterations += int(n)
+
+    def totals(self) -> CommProfile:
+        """Cumulative traffic: setup + per-iteration profile times the
+        executed iteration count (the per-iteration profile is constant
+        across iterations — fixed shapes, fixed topology)."""
+        it = self.per_iter.scaled(self.iterations)
+        return CommProfile(
+            self.setup.bytes + it.bytes,
+            self.setup.messages + it.messages,
+            self.setup.collectives + it.collectives,
+            self.setup.collective_bytes + it.collective_bytes)
+
+    def snapshot(self) -> dict:
+        return {"per_iter": self.per_iter.as_dict(),
+                "setup": self.setup.as_dict(),
+                "iterations": self.iterations,
+                "totals": self.totals().as_dict()}
+
+
+__all__ = ["CommLedger", "CommProfile"]

@@ -25,16 +25,22 @@ count ``n`` matters to the queue and the packers.
 
 from __future__ import annotations
 
+import collections
 import concurrent.futures
 import dataclasses
 import threading
 import time
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 
 # ---- accounting -----------------------------------------------------------
+
+# Window of recent per-request records kept by ``EngineStats``: enough for
+# stable p50/p99 estimates, bounded so a long-running async engine cannot
+# grow without limit (requests beyond the window age out oldest-first).
+PER_REQUEST_WINDOW = 4096
 
 @dataclasses.dataclass
 class RequestStats:
@@ -55,14 +61,20 @@ class EngineStats:
     n_shed: int = 0               # queued requests dropped to admit newer
     n_flushes: int = 0            # drain cycles that served >= 1 request
     total_time_s: float = 0.0
-    per_request: List[RequestStats] = dataclasses.field(default_factory=list)
+    # Ring of the most recent PER_REQUEST_WINDOW requests (bounded: a
+    # long-running async engine must not accumulate one record per request
+    # forever). Aggregate counters above cover the full history; the ring
+    # feeds the percentile estimates.
+    per_request: Deque[RequestStats] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=PER_REQUEST_WINDOW))
 
     @property
     def queries_per_s(self) -> float:
         return self.n_queries / self.total_time_s if self.total_time_s else 0.0
 
     def latency_percentiles(self, qs=(50, 99)) -> Tuple[float, ...]:
-        """Per-request latency percentiles in seconds, one per entry of
+        """Per-request latency percentiles in seconds over the retained
+        window (last ``PER_REQUEST_WINDOW`` requests), one per entry of
         ``qs`` (default p50/p99); (0.0, ...) before any request is served."""
         lat = [r.latency_s for r in self.per_request] or [0.0]
         return tuple(float(np.percentile(lat, q)) for q in qs)
@@ -297,7 +309,7 @@ def left_pad_pack(prompts: Sequence[Sequence[int]], slots: int,
 
 
 __all__ = [
-    "EngineStats", "QueueFullError", "Request", "RequestFuture",
-    "RequestQueue", "RequestStats", "ShedError", "bucket_for", "iter_slabs",
-    "left_pad_pack", "pow2_buckets",
+    "EngineStats", "PER_REQUEST_WINDOW", "QueueFullError", "Request",
+    "RequestFuture", "RequestQueue", "RequestStats", "ShedError",
+    "bucket_for", "iter_slabs", "left_pad_pack", "pow2_buckets",
 ]

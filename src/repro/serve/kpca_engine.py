@@ -48,6 +48,7 @@ import numpy as np
 
 from ..core import oos
 from ..core.oos import FittedKpca, ShardedFittedKpca
+from ..obs import metrics, trace
 from .batching import (EngineStats, QueueFullError, RequestFuture,
                        RequestQueue, RequestStats, iter_slabs, pow2_buckets)
 from .publisher import ModelHandle
@@ -141,6 +142,29 @@ class KpcaEngine:
                                    policy=self.cfg.admission)
         self._stop = threading.Event()
         self._flusher: Optional[threading.Thread] = None
+        # Cached metric handles, resolved once: the hot path must not pay
+        # a registry lookup per drain (and pays nothing per submit — all
+        # metric publication happens at the per-drain commit point).
+        self._m_requests = metrics.counter(
+            "serve_requests_total", "Requests served")
+        self._m_queries = metrics.counter(
+            "serve_queries_total", "Query rows served")
+        self._m_padded = metrics.counter(
+            "serve_padded_rows_total", "Wasted pad rows computed")
+        self._m_rejected = metrics.counter(
+            "serve_rejected_total", "Admissions refused (QueueFullError)")
+        self._m_shed = metrics.counter(
+            "serve_shed_total", "Queued requests shed to admit newer ones")
+        self._m_flushes = metrics.counter(
+            "serve_flushes_total", "Drain cycles that served >= 1 request")
+        self._m_depth = metrics.gauge(
+            "serve_queue_depth_rows", "Queued rows after the last drain")
+        self._m_version = metrics.gauge(
+            "serve_model_version", "Model version the last drain served")
+        self._m_latency = metrics.histogram(
+            "serve_request_latency_seconds", "Per-request device wall time")
+        self._m_wait = metrics.histogram(
+            "serve_queue_wait_seconds", "Submit -> start-of-serve wait")
 
         if isinstance(model, ShardedFittedKpca):
             from .sharded import project_sharded
@@ -200,10 +224,13 @@ class KpcaEngine:
         except QueueFullError:
             with self._stats_lock:
                 self.stats.n_rejected += 1
+            self._m_rejected.inc()
+            trace.instant("serve.rejected", n=x.shape[0])
             raise
         if shed:
             with self._stats_lock:
                 self.stats.n_shed += len(shed)
+            self._m_shed.inc(len(shed))
         return fut
 
     def flush(self) -> dict:
@@ -301,9 +328,10 @@ class KpcaEngine:
 
     @staticmethod
     def _resolve(entries, out: dict) -> None:
-        for e in entries:
-            if not e.future.done():          # skip caller-cancelled futures
-                e.future.set_result(out[e.rid])
+        with trace.span("serve.resolve", n_requests=len(entries)):
+            for e in entries:
+                if not e.future.done():      # skip caller-cancelled futures
+                    e.future.set_result(out[e.rid])
 
     # ---- internals -------------------------------------------------------
 
@@ -319,37 +347,57 @@ class KpcaEngine:
         #      ASYNC, so the critical section is microseconds and only
         #      orders concurrent drains' device programs;
         #   3. blocking device->host gets (no lock), then one stats commit.
-        slabs = list(iter_slabs(entries, self.cfg.max_batch, self._buckets))
-        staged = [self._stage_slab(slab) for slab, _, _ in slabs]
-        with self._dispatch_lock:
-            launched = [self._run_slab(model, xq) for xq in staged]
+        with trace.span("serve.pack", n_requests=len(entries)):
+            slabs = list(iter_slabs(entries, self.cfg.max_batch,
+                                    self._buckets))
+            staged = [self._stage_slab(slab) for slab, _, _ in slabs]
+        with trace.span("serve.dispatch", n_slabs=len(slabs)):
+            with self._dispatch_lock:
+                launched = [self._run_slab(model, xq) for xq in staged]
 
         results = {e.rid: [] for e in entries}
         touched = {e.rid: 0.0 for e in entries}
         total_dt, padded = 0.0, 0
-        for (slab, take, span_owners), dev in zip(slabs, launched):
-            t0 = time.perf_counter()
-            scores = np.asarray(dev)             # waits for this slab
-            dt = time.perf_counter() - t0
-            padded += slab.shape[0] - take
-            total_dt += dt
-            for rid in np.unique(span_owners):
-                sel = span_owners == rid
-                results[rid].append(scores[:take][sel])
-                touched[rid] += dt
+        with trace.span("serve.device", n_slabs=len(slabs)):
+            for (slab, take, span_owners), dev in zip(slabs, launched):
+                t0 = time.perf_counter()
+                scores = np.asarray(dev)         # waits for this slab
+                dt = time.perf_counter() - t0
+                padded += slab.shape[0] - take
+                total_dt += dt
+                for rid in np.unique(span_owners):
+                    sel = span_owners == rid
+                    results[rid].append(scores[:take][sel])
+                    touched[rid] += dt
 
         # Commit only after every slab resolved, so a failed-then-retried
         # flush doesn't double-count its slabs.
+        waits = [max(0.0, t_start - e.t_submit) for e in entries]
         with self._stats_lock:
             self.stats.n_padded += padded
             self.stats.total_time_s += total_dt
             self.stats.n_requests += len(entries)
             self.stats.n_queries += sum(e.n for e in entries)
             self.stats.n_flushes += 1
-            for e in entries:
+            for e, wait in zip(entries, waits):
                 self.stats.per_request.append(RequestStats(
-                    e.rid, e.n, touched[e.rid], version,
-                    queue_wait_s=max(0.0, t_start - e.t_submit)))
+                    e.rid, e.n, touched[e.rid], version, queue_wait_s=wait))
+        # Metric publication rides the same per-drain commit point (one
+        # batch of updates per drain, nothing on the submit hot path).
+        self._m_requests.inc(len(entries))
+        self._m_queries.inc(sum(e.n for e in entries))
+        self._m_padded.inc(padded)
+        self._m_flushes.inc()
+        self._m_depth.set(self._queue.depth)
+        self._m_version.set(version)
+        self._m_latency.observe_many(list(touched.values()))
+        self._m_wait.observe_many(waits)
+        if trace.is_enabled():
+            for e, wait in zip(entries, waits):
+                # Backdated complete event: the submit->serve gap renders
+                # as its own "queue_wait" phase without any submit-side
+                # instrumentation.
+                trace.complete("serve.queue_wait", wait, rid=e.rid, n=e.n)
         empty = np.zeros((0, model.n_components), np.float32)
         return {rid: np.concatenate(parts, axis=0) if parts else empty
                 for rid, parts in results.items()}

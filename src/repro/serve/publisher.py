@@ -33,6 +33,17 @@ from typing import Iterable, List, Optional, Tuple
 
 from ..core import oos
 from ..core.solver import resolve_refresh_policy
+from ..obs import metrics, trace
+
+# Module-level cached handles: every ModelHandle/BackgroundPublisher in the
+# process shares these (publishes are process-wide events, and resolving
+# once keeps registry lookups off the publish path).
+_M_PUBLISHES = metrics.counter(
+    "publish_swaps_total", "Model versions atomically published")
+_M_COALESCED = metrics.counter(
+    "publish_coalesced_total", "Snapshots dropped unpublished (latest-wins)")
+_M_ERRORS = metrics.counter(
+    "publish_errors_total", "Publisher worker jobs that raised")
 
 
 class ModelHandle:
@@ -94,7 +105,10 @@ class ModelHandle:
         with self._lock:
             self._model = model
             self._version += 1
-            return self._version
+            version = self._version
+        trace.instant("publish.swap", version=version)
+        _M_PUBLISHES.inc()
+        return version
 
     def refresh(self, alpha) -> int:
         """Publish the current model rebuilt around live dual coefficients
@@ -104,8 +118,9 @@ class ModelHandle:
         ``publish`` a re-compressed model instead. Refreshes from
         different threads serialize, so none is silently lost."""
         with self._refresh_lock:
-            return self.publish(
-                oos.refresh_coefficients(self.current(), alpha))
+            with trace.span("publish.refresh"):
+                model = oos.refresh_coefficients(self.current(), alpha)
+            return self.publish(model)
 
     def refresh_shard(self, shard: int, alpha) -> int:
         """Publish the current SHARDED model with one shard's coefficient
@@ -116,8 +131,10 @@ class ModelHandle:
         concurrent refreshes serialize, so two threads swapping DIFFERENT
         shards both land. Returns the new version."""
         with self._refresh_lock:
-            return self.publish(oos.refresh_shard_coefficients(
-                self.current(), shard, alpha))
+            with trace.span("publish.refresh", shard=shard):
+                model = oos.refresh_shard_coefficients(
+                    self.current(), shard, alpha)
+            return self.publish(model)
 
 
 class BackgroundPublisher:
@@ -174,12 +191,16 @@ class BackgroundPublisher:
         with self._cond:
             if self._closed:
                 raise RuntimeError("publisher is closed")
-            if key in self._jobs:
+            coalesced = key in self._jobs
+            if coalesced:
                 self.n_coalesced += 1
             else:
                 self._order.append(key)
             self._jobs[key] = payload
             self._cond.notify_all()
+        if coalesced:
+            _M_COALESCED.inc()
+            trace.instant("publish.coalesced", target=str(key))
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -230,15 +251,18 @@ class BackgroundPublisher:
                 self._busy = True
             try:
                 kind, shard = key
-                if kind == "refresh":
-                    self.handle.refresh(payload)
-                elif kind == "shard":
-                    self.handle.refresh_shard(shard, payload)
-                else:
-                    self.handle.publish(payload)
+                with trace.span("publish.job", kind=kind,
+                                shard=-1 if shard is None else shard):
+                    if kind == "refresh":
+                        self.handle.refresh(payload)
+                    elif kind == "shard":
+                        self.handle.refresh_shard(shard, payload)
+                    else:
+                        self.handle.publish(payload)
                 ok = True
             except BaseException as e:   # remembered, reraised at drain
                 ok = False
+                _M_ERRORS.inc()
                 with self._cond:
                     self._errors.append(e)
             with self._cond:
@@ -278,14 +302,30 @@ def stream_chunks(chunks: Iterable, handle: ModelHandle,
         raise ValueError("pass either every= or policy=, not both")
     pol = resolve_refresh_policy(policy if policy is not None else every)
     target = publisher if publisher is not None else handle
+    # COKE-style cadence accounting: every should_refresh decision is an
+    # event — "fired" (snapshot published) or "censored" (communication
+    # saved), labeled by the policy that made it.
+    pol_name = type(pol).__name__
+    m_fired = metrics.counter(
+        "solver_refresh_fired_total",
+        "Refresh-policy decisions that published", policy=pol_name)
+    m_censored = metrics.counter(
+        "solver_refresh_censored_total",
+        "Refresh-policy decisions that skipped a publish", policy=pol_name)
     last = None
     pending = False
     for chunk in chunks:
         last = chunk
-        if pol.should_refresh(chunk):
+        fired = pol.should_refresh(chunk)
+        if trace.is_enabled():
+            trace.instant("solver.refresh_decision", fired=fired,
+                          policy=pol_name, t=int(chunk.state.t))
+        if fired:
+            m_fired.inc()
             target.refresh(chunk.state.alpha)
             pending = False
         else:
+            m_censored.inc()
             pending = True
     if last is not None and pending:
         target.refresh(last.state.alpha)

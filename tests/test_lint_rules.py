@@ -466,6 +466,79 @@ class TestDonatedReuse:
 
 
 # ---------------------------------------------------------------------------
+# observability rules
+
+
+class TestSpanNotClosed:
+    def test_bare_span_call_flagged(self):
+        out = lint("""
+            from repro.obs import trace
+            def serve(entries):
+                trace.span("serve.pack", n=len(entries))
+                return entries
+        """)
+        assert rules_of(out) == ["span-not-closed"]
+
+    def test_assigned_span_flagged(self):
+        # spans record on __exit__; an assigned-but-never-entered span is
+        # silent data loss, not deferred instrumentation
+        out = lint("""
+            from repro.obs import trace
+            def serve(entries):
+                s = trace.span("serve.pack")
+                return entries
+        """)
+        assert rules_of(out) == ["span-not-closed"]
+
+    def test_with_statement_clean(self):
+        assert lint("""
+            from repro.obs import trace
+            def serve(entries):
+                with trace.span("serve.pack", n=len(entries)):
+                    return entries
+        """) == []
+
+    def test_with_as_and_tracer_instance_clean(self):
+        assert lint("""
+            def record(tracer, work):
+                with tracer.span("phase") as s:
+                    s.annotate(n=len(work))
+                    return work
+        """) == []
+
+    def test_chained_annotate_inside_with_clean(self):
+        assert lint("""
+            from repro.obs import trace
+            def serve(entries):
+                with trace.span("serve.pack").annotate(n=1):
+                    return entries
+        """) == []
+
+    def test_returned_span_is_a_factory_not_a_leak(self):
+        assert lint("""
+            def span(tracer, name):
+                return tracer.span(name)
+        """) == []
+
+    def test_unrelated_span_function_clean(self):
+        # only trace-ish attribute bases match: np column spans etc. are
+        # out of scope by design
+        assert lint("""
+            def f(table):
+                table.span("rows")
+                return table
+        """) == []
+
+    def test_pragma_suppresses(self):
+        assert lint("""
+            from repro.obs import trace
+            def defer(stack):
+                s = trace.span("x")  # repro-lint: disable=span-not-closed
+                stack.enter_context(s)
+        """) == []
+
+
+# ---------------------------------------------------------------------------
 # CLI + repo self-check
 
 
@@ -505,7 +578,7 @@ class TestCli:
         for rule in ("guarded-by", "blocking-in-lock", "thread-join",
                      "lock-order", "bare-acquire", "impure-jit",
                      "closure-capture", "interpret-literal",
-                     "donated-reuse"):
+                     "donated-reuse", "span-not-closed"):
             assert rule in res.stdout
 
     def test_unknown_rule_is_usage_error(self):

@@ -1,0 +1,80 @@
+"""Observability rules.
+
+The span tracer (``src/repro/obs/trace.py``) records a span only when its
+context manager EXITS: a ``trace.span(...)`` / ``tracer.span(...)`` call
+that is never entered with ``with`` silently records nothing — the
+instrumented phase just disappears from the flight recording, which is the
+worst kind of observability bug (absence looks like idleness). The
+``span-not-closed`` rule flags span-factory calls used as bare expressions,
+arguments, or assignments instead of as a ``with`` context.
+
+Recognized factories are attribute calls ``<base>.span(...)`` where the
+base name mentions ``trace`` (the module alias ``trace``, a ``tracer``
+instance, ``self._tracer``, ...). A plain ``span(...)`` name call is NOT
+matched — too many unrelated functions are called span (e.g. numpy column
+spans), and the repo convention is to call through the module
+(``trace.span``). Deliberate deferred-entry uses (rare; e.g. handing a
+span to an ExitStack) can pragma the line with
+``# repro-lint: disable=span-not-closed``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..engine import FileContext, Finding, Rule, register
+
+
+def _base_mentions_trace(expr: ast.AST) -> bool:
+    """Does the attribute base refer to a tracer? Matches ``trace``,
+    ``tracer``, ``self._tracer``, ``obs.trace`` ... by name substring."""
+    if isinstance(expr, ast.Name):
+        return "trace" in expr.id.lower()
+    if isinstance(expr, ast.Attribute):
+        return "trace" in expr.attr.lower() or _base_mentions_trace(expr.value)
+    return False
+
+
+def _is_span_factory(call: ast.Call) -> bool:
+    return (isinstance(call.func, ast.Attribute)
+            and call.func.attr == "span"
+            and _base_mentions_trace(call.func.value))
+
+
+@register
+class SpanNotClosedRule(Rule):
+    name = "span-not-closed"
+    summary = ("a trace/tracer .span(...) call must be entered via 'with' "
+               "— a span that never exits is never recorded")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call) and _is_span_factory(node)):
+                continue
+            # Entered via with — directly, or through a chained call
+            # (``with trace.span(...).annotate(...):``): walk up any
+            # attribute/call chain looking for the enclosing withitem.
+            if self._in_with_chain(node):
+                continue
+            # ``return <factory>.span(...)`` — a wrapper handing the span
+            # to ITS caller to enter (the trace module's own pattern).
+            if isinstance(getattr(node, "parent", None), ast.Return):
+                continue
+            yield self.finding(
+                ctx, node,
+                "span is created but never entered — spans record on "
+                "__exit__ only; write \"with ...span(...):\" around the "
+                "timed work (or pragma a deliberate deferred entry)")
+
+    @staticmethod
+    def _in_with_chain(call: ast.Call) -> bool:
+        node = call
+        while hasattr(node, "parent"):
+            parent = node.parent
+            if isinstance(parent, ast.withitem):
+                return True
+            if not isinstance(parent, (ast.Attribute, ast.Call)):
+                return False
+            node = parent
+        return False
