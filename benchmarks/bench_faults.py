@@ -1,0 +1,116 @@
+"""Fault-tolerance cost benchmark: what does surviving a fault cost?
+
+Two recovery paths, timed end to end (docs/FAULT_TOLERANCE.md):
+
+  1. ADMM dropout recovery — the re-knit + state-shrink + setup-rebuild
+     pause when nodes leave mid-run, and the throughput cost of running
+     the solver with an active link mask vs the untouched fault-free
+     path (the mask becomes a traced operand only when faults exist;
+     fault-free stays the baseline jaxpr).
+  2. Serving shard-loss re-balance — latency of ``oos.drop_shard`` +
+     the atomic publish, and the end-to-end request latency of a batch
+     that hits the loss, retries, and serves from the survivor model.
+
+Rows follow the harness convention (name, us_per_call, derived).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KernelSpec, oos
+from repro.core.topology import ring
+from repro.data import kpca_dataset, node_dataset
+from repro.faults import (FaultPlan, FaultTolerantRun, NodeDropout,
+                          ShardLoss, ShardLossInjector, ShardRebalancer)
+from repro.serve import KpcaEngine, KpcaServeConfig, ModelHandle
+
+SPEC = KernelSpec(kind="rbf")
+
+
+def _drive(run: FaultTolerantRun) -> None:
+    for _ in run.chunks():
+        pass
+
+
+def _admm_dropout_rows(m: int = 24):
+    nodes, _ = node_dataset(12, 40, m=m, seed=4)
+    graph = ring(12, hops=2)
+    kw = dict(n_iters=30, chunk=10)
+
+    run = FaultTolerantRun(nodes, graph, SPEC, FaultPlan(), **kw)
+    t0 = time.perf_counter()
+    _drive(run)
+    clean_s = time.perf_counter() - t0
+
+    plan = FaultPlan(dropouts=(NodeDropout(t=15, node=3),
+                               NodeDropout(t=15, node=7)))
+    run = FaultTolerantRun(nodes, graph, SPEC, plan, **kw)
+    t0 = time.perf_counter()
+    _drive(run)
+    faulty_s = time.perf_counter() - t0
+    # the faulty run does the same 30 iterations (on 12 then 10 nodes)
+    # plus one recovery: the delta is reknit + shrink + setup rebuild +
+    # the survivor-shape retrace
+    t_recover_us = (faulty_s - clean_s) * 1e6
+    rows = [
+        ("faults/admm_clean_30it", clean_s * 1e6 / 30, "per-iter;12nodes"),
+        ("faults/admm_dropout_30it", faulty_s * 1e6 / 30,
+         f"per-iter;drop2@15;reknits={run.n_reknits}"),
+        ("faults/dropout_recovery_overhead", max(t_recover_us, 0.0),
+         "total-extra;reknit+shrink+rebuild+retrace"),
+    ]
+    return rows
+
+
+def _serving_rebalance_rows():
+    x = jnp.asarray(kpca_dataset(96, m=12, seed=0))
+    model = oos.fit_central(x, SPEC, n_components=2, center=True)
+    sharded, _ = oos.shard_fitted(model, 4)
+
+    # bare drop_shard + publish: the atomic re-balance itself
+    handle = ModelHandle(sharded)
+    reb = ShardRebalancer()
+    from repro.faults.errors import ShardLostError
+    t0 = time.perf_counter()
+    reb(ShardLostError(2), handle)
+    rebalance_us = (time.perf_counter() - t0) * 1e6
+
+    # end-to-end: a request that hits the loss, retries, serves survivor
+    handle2 = ModelHandle(sharded)
+    eng = KpcaEngine(
+        handle2,
+        KpcaServeConfig(max_batch=16, min_bucket=8, max_retries=2,
+                        retry_backoff_s=0.001),
+        inject_fault=ShardLossInjector(
+            FaultPlan(shard_losses=(ShardLoss(at_dispatch=0, shard=1),))),
+        on_fault=ShardRebalancer())
+    xq = np.random.default_rng(0).normal(size=(8, 12)).astype(np.float32)
+    eng.project_many([xq])                  # dispatch 0: fault -> rebalance
+    t0 = time.perf_counter()
+    eng.project_many([xq])
+    healed_us = (time.perf_counter() - t0) * 1e6
+
+    eng2 = KpcaEngine(ModelHandle(sharded),
+                      KpcaServeConfig(max_batch=16, min_bucket=8))
+    eng2.project_many([xq])
+    t0 = time.perf_counter()
+    eng2.project_many([xq])
+    clean_us = (time.perf_counter() - t0) * 1e6
+    return [
+        ("faults/rebalance_publish", rebalance_us, "drop_shard+publish"),
+        ("faults/serve_clean", clean_us, "8q;4shards"),
+        ("faults/serve_post_recovery", healed_us, "8q;survivor-model"),
+    ]
+
+
+def bench_faults(m: int = 24):
+    return _admm_dropout_rows(m=m) + _serving_rebalance_rows()
+
+
+if __name__ == "__main__":
+    for row in bench_faults():
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

@@ -33,10 +33,10 @@ sys.path.insert(0, _ROOT)                      # `python benchmarks/run.py ...`
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 ALL_SUITES = ["fig3", "fig4", "fig5", "rt", "kernels", "roofline", "serve",
-              "shard", "async", "obs"]
+              "shard", "async", "obs", "faults"]
 QUICK_DIM_SUITES = ("fig3", "fig4", "fig5", "rt", "serve", "shard", "async",
-                    "obs")
-SMOKE_SUITES = ["kernels", "serve", "shard", "async", "obs"]
+                    "obs", "faults")
+SMOKE_SUITES = ["kernels", "serve", "shard", "async", "obs", "faults"]
 
 
 def _parse_args():
@@ -122,6 +122,7 @@ def main() -> None:
                                        bench_similarity_vs_neighbors,
                                        bench_similarity_vs_nodes,
                                        bench_similarity_vs_samples)
+    from benchmarks.bench_faults import bench_faults
     from benchmarks.bench_obs import bench_obs
     from benchmarks.bench_roofline import bench_roofline_summary
     from benchmarks.bench_serve_async import bench_serve_async
@@ -143,6 +144,7 @@ def main() -> None:
         "shard": bench_serve_sharded,
         "async": bench_serve_async,
         "obs": bench_obs,
+        "faults": bench_faults,
     }
 
     assert list(suites) == ALL_SUITES, "keep ALL_SUITES in sync"

@@ -131,7 +131,8 @@ def kernel_mean_stats(x_nodes: jax.Array, spec: KernelSpec, gamma):
 
 def build_setup(x_nodes: jax.Array, graph: Graph, spec: KernelSpec,
                 center: str | bool = "global", include_self: bool = True,
-                rel_eps: float = 1e-6) -> DkpcaSetup:
+                rel_eps: float = 1e-6,
+                gamma: float | None = None) -> DkpcaSetup:
     """Precompute Gram blocks / factorizations; mirrors the paper's setup
     phase where raw data is exchanged with neighbors and all K(X_p, X_q),
     p,q in Omega_j, are formed once.
@@ -172,7 +173,12 @@ def build_setup(x_nodes: jax.Array, graph: Graph, spec: KernelSpec,
     # is disabled, so Gram validity masking uses a mask with slot 0 on.
     gmask = np.concatenate([np.full((j, 1), True), nmask], axis=1)
 
-    gamma = resolve_gamma(spec, x_nodes.reshape(j * n, -1))
+    # gamma is normally resolved from the pooled data; a caller that
+    # REBUILDS a setup mid-run (e.g. the fault driver after a re-knit, on
+    # survivor data only) must pin the original value so the kernel — and
+    # therefore the warm-started iterate — stays the same operator.
+    if gamma is None:
+        gamma = resolve_gamma(spec, x_nodes.reshape(j * n, -1))
 
     xs = x_nodes[src]                                    # (J, S, N, M)
 

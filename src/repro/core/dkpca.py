@@ -90,6 +90,7 @@ def dkpca_distributed(
     message_dtype=None,
     unroll_iters: bool = False,
     ledger: Optional[CommLedger] = None,
+    link_mask=None,
 ) -> DistDkpcaResult:
     """Run decentralized kPCA with one network node per device.
 
@@ -107,6 +108,16 @@ def dkpca_distributed(
     ledger: a ``repro.obs.CommLedger`` accounting PER-NODE wire traffic —
     setup-phase exchanges land in ``ledger.setup``, the iterate phase in
     ``ledger.per_iter`` (recorded at trace time; see repro.obs.comm).
+    link_mask: optional (n_iters, J, S) {0,1} per-iteration slot mask
+    censoring lost/delayed links (repro.faults.FaultPlan.link_mask) —
+    same COKE-style semantics as the dense driver: the received columns
+    are zeroed at the transport AND the censored slots leave the
+    consensus weights (admm_step(slot_mask=...)), so the SPMD trajectory
+    matches the dense path under the same mask (parity-tested in
+    tests/test_fault_injection.py). Node DROPOUT is not handled here:
+    the mesh is fixed for the life of one call, so recovery is a
+    re-launch on the survivor mesh with the shrunk state
+    (repro.faults.shrink_state) passed via alpha0/b0/t0.
     """
     axis_names = tuple(axis_names)
     j_nodes = int(np.prod([mesh.shape[a] for a in axis_names]))
@@ -158,10 +169,20 @@ def dkpca_distributed(
                  local_init=local_init, use_pallas=use_pallas,
                  message_dtype=message_dtype, unroll_iters=unroll_iters,
                  ledger=ledger)
+    in_specs = [P(axis_names, None, None), P(axis_names, None),
+                P(axis_names, None, None), P(), P()]
+    args = [x_nodes, alpha0, b0, g, rho2_arr]
+    if link_mask is not None:
+        # extra sharded operand ONLY when faults are injected: the
+        # fault-free program stays byte-identical to the pre-fault trace.
+        lm = jnp.asarray(link_mask, jnp.float32)
+        assert lm.shape == (n_iters, jj, s_slots), \
+            (lm.shape, (n_iters, jj, s_slots))
+        in_specs.append(P(None, axis_names, None))
+        args.append(lm)
     shmap = shard_map(
         fn, mesh=mesh,
-        in_specs=(P(axis_names, None, None), P(axis_names, None),
-                  P(axis_names, None, None), P(), P()),
+        in_specs=tuple(in_specs),
         out_specs=(P(axis_names, None), P(axis_names, None, None),
                    P(None, axis_names, None), P(None), P(None, axis_names)),
         # Pallas calls inside the body produce ShapeDtypeStructs without vma
@@ -169,20 +190,21 @@ def dkpca_distributed(
         check_vma=False,
     )
     with mesh:
-        alpha, b_f, hist, res, zn = jax.jit(shmap)(
-            x_nodes, alpha0, b0, g, rho2_arr)
+        alpha, b_f, hist, res, zn = jax.jit(shmap)(*args)
     if ledger is not None:
         ledger.add_iterations(n_iters)
     return DistDkpcaResult(alpha=alpha, alpha_hist=hist, primal_residual=res,
                            znorm2_hist=zn, b=b_f)
 
 
-def _node_fn(x_blk, a_blk, b_blk, g, rho2_arr, *, axes, j_nodes, offsets,
-             rev_static, s_slots, spec, center, rho_self, include_self,
-             project, n_iters, t0, local_init=False, use_pallas=False,
-             message_dtype=None, unroll_iters=False, ledger=None):
+def _node_fn(x_blk, a_blk, b_blk, g, rho2_arr, *extra, axes, j_nodes,
+             offsets, rev_static, s_slots, spec, center, rho_self,
+             include_self, project, n_iters, t0, local_init=False,
+             use_pallas=False, message_dtype=None, unroll_iters=False,
+             ledger=None):
     """Per-node SPMD program. x_blk: (1, N, M); a_blk: (1, N);
-    b_blk: (1, N, S).
+    b_blk: (1, N, S); extra: optionally one (n_iters, 1, S) per-node
+    fault link mask (this node's censored slots per iteration).
 
     message_dtype (e.g. jnp.bfloat16): §Perf knob — cast per-iteration
     ppermute payloads (alpha, K^-1 B columns, z-projections) to a narrower
@@ -191,6 +213,7 @@ def _node_fn(x_blk, a_blk, b_blk, g, rho2_arr, *, axes, j_nodes, offsets,
     alpha = a_blk[0]
     b0 = b_blk[0]
     n = x.shape[0]
+    lm = extra[0][:, 0] if extra else None               # (n_iters, S)
 
     def gram_fn(xa, xb):
         if use_pallas:
@@ -263,7 +286,13 @@ def _node_fn(x_blk, a_blk, b_blk, g, rho2_arr, *, axes, j_nodes, offsets,
         st = carry
         rho_slots = jnp.concatenate(
             [jnp.full((1,), rho_self), jnp.full((n_nbr,), rho2_arr[t])])
-        new, res = admm_step(ops, comm, st, rho_slots, project)
+        if lm is None:
+            new, res = admm_step(ops, comm, st, rho_slots, project)
+        else:
+            from ..faults.comm import FaultyComm  # lazy: leaf, no cycle
+            sm = lm[t]
+            new, res = admm_step(ops, FaultyComm(comm, sm), st, rho_slots,
+                                 project, slot_mask=sm)
         return new, (new.alpha, res, new.znorm2)
 
     state0 = AdmmState(

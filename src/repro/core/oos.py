@@ -678,6 +678,64 @@ def refresh_shard_coefficients(model: ShardedFittedKpca, shard: int,
                                row_mean_coef=row_mean_coef, bias=bias)
 
 
+def drop_shard(model: ShardedFittedKpca, shard: int) -> ShardedFittedKpca:
+    """Shard-loss re-balance: serve on without the lost shard's rows.
+
+    Keeps the shard axis at S — a ``ModelHandle`` pins ``n_shards`` (and
+    the engine's mesh matches it), so recovery must not re-shard; instead
+    the lost shard becomes an empty participant: its support rows,
+    coefficient rows AND indicator column are zeroed, so its psum
+    contribution is exactly zero (``K @ 0``), and ``shard_sizes[shard]``
+    drops to 0. The global centering epilogue is rebuilt for the
+    SURVIVOR support set — ``n_support`` shrinks and, when the model
+    carries its per-shard kernel-mean cache, (row_mean_coef, bias) are
+    recomputed from the surviving shards' cached sums
+    (``_sharded_centering`` with the lost shard's slices zeroed). The
+    result equals ``shard_fitted`` of a fresh fit on the survivor
+    support set up to the zero padding — pinned by
+    tests/test_fault_injection.py against ``gather_fitted`` + central
+    ``project``.
+
+    Models without the cache (landmark-compressed, or uncentered) keep
+    their existing centering constants: for uncentered fits they are
+    zero anyway; for compressed fits the folded row-mean/bias terms are
+    per-row and the lost rows are simply gone — a documented
+    approximation (docs/FAULT_TOLERANCE.md), not an error, because
+    recovery must not refuse to serve.
+
+    Idempotent: dropping an already-empty shard returns the model
+    unchanged, which is what makes the re-balance publish exactly-once
+    under concurrent retries (``repro.faults.serving.ShardRebalancer``).
+    """
+    if not isinstance(model, ShardedFittedKpca):
+        raise TypeError(
+            f"drop_shard takes a ShardedFittedKpca, got "
+            f"{type(model).__name__}")
+    if not 0 <= shard < model.n_shards:
+        raise ValueError(f"shard {shard} not in [0, {model.n_shards})")
+    if model.shard_sizes[shard] == 0:
+        return model
+    sizes = tuple(0 if j == shard else n
+                  for j, n in enumerate(model.shard_sizes))
+    n_support = int(sum(sizes))
+    if n_support == 0:
+        raise ValueError("cannot drop the last non-empty shard")
+    c = model.n_components
+    x_support = model.x_support.at[shard].set(0.0)
+    coefs_ext = model.coefs_ext.at[shard].set(0.0)
+    k_row_mean = model.k_row_mean
+    row_mean_coef, bias = model.row_mean_coef, model.bias
+    if k_row_mean is not None:
+        k_row_mean = k_row_mean.at[shard].set(0.0)
+        survivor = dataclasses.replace(model, k_row_mean=k_row_mean)
+        row_mean_coef, bias = _sharded_centering(survivor,
+                                                 coefs_ext[..., :c])
+    return dataclasses.replace(
+        model, x_support=x_support, coefs_ext=coefs_ext,
+        row_mean_coef=row_mean_coef, bias=bias, n_support=n_support,
+        shard_sizes=sizes, k_row_mean=k_row_mean)
+
+
 def gather_fitted(sharded: ShardedFittedKpca) -> FittedKpca:
     """Reassemble a single-device ``FittedKpca`` from a sharded model.
 
@@ -777,8 +835,8 @@ def load_sharded(ckpt_dir: str) -> ShardedFittedKpca:
 
 
 __all__ = [
-    "FittedKpca", "ShardedFittedKpca", "compress", "effective_coefs",
-    "finalize_partial_scores", "fit_central", "from_dual",
+    "FittedKpca", "ShardedFittedKpca", "compress", "drop_shard",
+    "effective_coefs", "finalize_partial_scores", "fit_central", "from_dual",
     "from_decentralized", "gather_fitted", "landmark_schedule", "load_fitted",
     "load_sharded", "project", "refresh_coefficients",
     "refresh_shard_coefficients", "save_fitted", "save_sharded",

@@ -227,7 +227,8 @@ def _pinv_lam(lam: jax.Array, rel_thresh: float = 1e-5) -> jax.Array:
 
 
 def admm_step(ops: SolverOps, comm, state: AdmmState, rho_slots: jax.Array,
-              project: str = "ball"):
+              project: str = "ball",
+              slot_mask: Optional[jax.Array] = None):
     """One ADMM iteration (paper eq. 10-13, per-slot-rho generalization).
 
     Args:
@@ -239,6 +240,15 @@ def admm_step(ops: SolverOps, comm, state: AdmmState, rho_slots: jax.Array,
         (J, S)); zero on invalid slots.
       project: "ball" (paper eq. 11), "sphere" (always renormalize), or
         "rescale" (ball + global gauge renormalization; needs comm.all_max).
+      slot_mask: optional {0,1} mask over slots (same shape as
+        ``rho_slots``) censoring links down for THIS iteration — the
+        COKE-style degradation under faults (docs/FAULT_TOLERANCE.md):
+        ``rho_bar`` renormalizes over the slots actually heard, the
+        censored constraints leave the z/alpha updates AND the residual,
+        and their duals freeze (rho = 0 ⇒ the eq. 13 update is a no-op).
+        Slot 0 (self) must never be masked. A node isolated outright this
+        iteration (every slot censored, possible only without a self
+        slot) holds its (alpha, B) instead of collapsing to zero.
 
     Returns:
       (state', primal_residual) — state' has t+1 and the g/znorm2/rho
@@ -250,6 +260,10 @@ def admm_step(ops: SolverOps, comm, state: AdmmState, rho_slots: jax.Array,
         # trace-time bracket: everything the transport records until
         # end_iteration is exactly one iteration's traffic (repro.obs.comm)
         ledger.begin_iteration()
+    faulty = slot_mask is not None
+    if faulty:
+        ops = dataclasses.replace(ops, mask=ops.mask * slot_mask)
+        rho_slots = rho_slots * slot_mask
     alpha, b = state.alpha, state.b
 
     # ---- message round 1: K^-1 B columns + alpha --------------------------
@@ -266,6 +280,9 @@ def admm_step(ops: SolverOps, comm, state: AdmmState, rho_slots: jax.Array,
     # ---- Z-update (eq. 10-11) --------------------------------------------
     def z_update(o, rho_j, rm1, ra):
         rho_bar = jnp.sum(rho_j)
+        if faulty:
+            # fully-censored node: avoid 0/0 (its update is discarded below)
+            rho_bar = jnp.maximum(rho_bar, 1e-30)
         c = ((rm1 + rho_j[:, None] * ra) / rho_bar) * o.mask[:, None]
         znorm2 = jnp.einsum("an,abnm,bm->", c, o.kcross, c)
         rs = jax.lax.rsqrt(jnp.maximum(znorm2, 1e-30))
@@ -300,6 +317,13 @@ def admm_step(ops: SolverOps, comm, state: AdmmState, rho_slots: jax.Array,
 
     alpha_n, b_n, g, res_part = comm.local(primal_dual)(
         ops, alpha, b, rho_slots, g_slots)
+    if faulty:
+        # A node that heard nobody this iteration (rho_bar = 0) has no
+        # consensus information: den <= 0 zeroes every direction and the
+        # naive update would collapse alpha to 0. Hold its state instead.
+        live = jnp.sum(rho_slots, axis=-1) > 0.0
+        alpha_n = jnp.where(live[..., None], alpha_n, alpha)
+        b_n = jnp.where(live[..., None, None], b_n, b)
     res = jnp.sqrt(comm.all_sum(res_part))
 
     if project == "rescale":
@@ -440,16 +464,29 @@ def _slot_rho_dense(mask: jax.Array, rho1, rho2) -> jax.Array:
 def _dense_chunk(ops: SolverOps, src, rsl, state: AdmmState,
                  rho1_arr, rho2_arr, n_steps: int, project: str,
                  ledger: Optional[CommLedger] = None,
-                 wire_entries: int = 0):
+                 wire_entries: int = 0,
+                 link_mask: Optional[jax.Array] = None):
     # ledger/wire_entries are static: the ledger records at trace time
     # (hashed by identity — one ledger per run_chunked call, so at most
     # one extra compilation per run vs the unledgered path).
+    # link_mask is a TRACED (n_steps, J, S) {0,1} array (or None — the
+    # fault-free trace is byte-identical to before the fault layer
+    # existed); row i censors iteration i's links, transport-level via
+    # FaultyComm and consensus-level via admm_step(slot_mask=...).
     comm = DenseComm(src, rsl, ledger=ledger, wire_entries=wire_entries)
+    if link_mask is not None:
+        from ..faults.comm import FaultyComm  # lazy: leaf module, no cycle
+        base_comm = comm
 
     def step(carry, i):
         st = carry
         rho_slots = _slot_rho_dense(ops.mask, rho1_arr[i], rho2_arr[i])
-        new, res = admm_step(ops, comm, st, rho_slots, project)
+        if link_mask is None:
+            new, res = admm_step(ops, comm, st, rho_slots, project)
+        else:
+            sm = link_mask[i]
+            new, res = admm_step(ops, FaultyComm(base_comm, sm), st,
+                                 rho_slots, project, slot_mask=sm)
         # Theorem-2 pairing: L(alpha^t, Z^t, eta^t) with Z^t generated from
         # the incoming (alpha^t, eta^t) — i.e. this step's g.
         lag = lagrangian(ops, st.alpha, st.b, new.g, rho_slots)
@@ -491,7 +528,9 @@ def run_chunked(setup, n_iters: int = 30, chunk: int = 10,
                 tol: float = 0.0,
                 ckpt_dir: Optional[str] = None,
                 ckpt_every: int = 1,
-                ledger: Optional[CommLedger] = None) -> Iterator[ChunkResult]:
+                ledger: Optional[CommLedger] = None,
+                link_mask: Optional[np.ndarray] = None
+                ) -> Iterator[ChunkResult]:
     """Resumable chunked driver for the reference path (Alg. 1).
 
     Scans ``chunk`` iterations per jitted call and yields a ``ChunkResult``
@@ -531,6 +570,12 @@ def run_chunked(setup, n_iters: int = 30, chunk: int = 10,
       ledger: a ``repro.obs.CommLedger`` to account per-iteration
         communication into (network-wide bytes for this dense transport);
         each yielded chunk then carries ``comm_bytes``/``comm_messages``.
+      link_mask: optional ``(n_iters, J, S)`` {0,1} array censoring links
+        per ABSOLUTE iteration index (compiled from a
+        ``repro.faults.FaultPlan`` via ``plan.link_mask``); row t is
+        applied at iteration t via ``admm_step(slot_mask=...)`` plus a
+        transport-level ``FaultyComm`` wrap. None (default) keeps the
+        fault-free jit trace unchanged.
 
     Yields:
       ``ChunkResult`` per chunk; generator ends after the final chunk or
@@ -548,6 +593,12 @@ def run_chunked(setup, n_iters: int = 30, chunk: int = 10,
         state = init_state(alpha0, setup.n_slots)
     ops, comm = dense_parts(setup)
     rho1_eff = float(rho1) if setup.include_self else 0.0
+    if link_mask is not None:
+        link_mask = np.asarray(link_mask, np.float32)
+        j, s = np.asarray(setup.src).shape
+        if link_mask.shape != (n_iters, j, s):
+            raise ValueError(
+                f"link_mask shape {link_mask.shape} != {(n_iters, j, s)}")
 
     wire_entries = 0
     if ledger is not None:
@@ -581,10 +632,14 @@ def run_chunked(setup, n_iters: int = 30, chunk: int = 10,
         rho1_arr = jnp.full((c,), rho1_eff, jnp.float32)
         # The span times trace + dispatch; execution is async (the device
         # is only awaited where a host value is read, e.g. the residual).
+        lm_chunk = None
+        if link_mask is not None:
+            lm_chunk = jnp.asarray(link_mask[t:t + c])
         with trace.span("solver.step", t=t, steps=c):
             state, ahist, lhist, rhist = _dense_chunk(
                 ops, comm.src, comm.rsl, state, rho1_arr, rho2_arr, c,
-                project, ledger=ledger, wire_entries=wire_entries)
+                project, ledger=ledger, wire_entries=wire_entries,
+                link_mask=lm_chunk)
         t += c
         chunk_idx += 1
         comm_bytes = comm_msgs = 0

@@ -1,0 +1,69 @@
+"""FaultyComm: transport-level fault injection for the ADMM solver.
+
+Wraps any object satisfying the ``Communicator`` protocol
+(``core/solver.py``: ``local`` / ``exchange`` / ``all_sum`` / ``all_max``)
+and censors undelivered messages by zeroing the received columns for
+masked slots. Composes with both backends:
+
+- ``DenseComm``: received block is ``(J, S, N)`` and the mask is
+  ``(J, S)`` — receiver j, slot s.
+- ``RingComm`` (inside ``shard_map``): received block is ``(S, N)`` per
+  node and the mask is ``(S,)`` for THIS node's slots.
+
+Zeroing alone is only half the semantics: the solver must also drop the
+censored slots from the consensus weights so ``rho_bar`` renormalizes
+over slots actually heard and the matching duals freeze (rho = 0 ⇒ the
+dual update is a no-op). That half lives in ``admm_step(slot_mask=...)``;
+this wrapper guarantees that whatever DID arrive on a dead link can never
+leak into the update, even if a future refactor forgets a mask multiply.
+Defense in depth — the chaos tests pin both layers.
+
+The wrapper is reused across iterations via :meth:`with_mask`, which
+returns a cheap re-bound view (no per-call tracer or metric objects —
+the obs disabled-path test in ``tests/test_obs.py`` holds this to the
+same zero-retention contract as the rest of the hot path). Fault
+*accounting* (``faults_injected_total`` etc.) is host-side in the driver,
+never inside traced code.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+
+class FaultyComm:
+    """A ``Communicator`` that censors exchanged columns by a slot mask."""
+
+    __slots__ = ("base", "mask")
+
+    def __init__(self, base: Any, mask: Optional[Any] = None):
+        self.base = base
+        self.mask = mask
+
+    def with_mask(self, mask: Any) -> "FaultyComm":
+        """Re-bind to this iteration's ``(J, S)`` / ``(S,)`` slot mask."""
+        return FaultyComm(self.base, mask)
+
+    # -- Communicator protocol --------------------------------------------
+
+    def local(self, fn: Callable) -> Any:
+        return self.base.local(fn)
+
+    def exchange(self, cols: Any) -> Any:
+        recv = self.base.exchange(cols)
+        if self.mask is None:
+            return recv
+        return recv * self.mask[..., None]
+
+    def all_sum(self, x: Any) -> Any:
+        return self.base.all_sum(x)
+
+    def all_max(self, x: Any) -> Any:
+        return self.base.all_max(x)
+
+    @property
+    def ledger(self):
+        return getattr(self.base, "ledger", None)
+
+
+__all__ = ["FaultyComm"]

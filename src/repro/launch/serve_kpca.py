@@ -24,6 +24,7 @@ from ..core import oos
 from ..core.kernels_math import KernelSpec
 from ..data import kpca_dataset
 from ..obs.cli import add_obs_args, obs_session
+from ..faults import FaultError, transient_faults
 from ..serve import KpcaEngine, KpcaServeConfig, ModelHandle, QueueFullError
 
 
@@ -46,6 +47,16 @@ def main():
     ap.add_argument("--admission", default="reject",
                     choices=["reject", "shed"])
     ap.add_argument("--flush-wait-ms", type=float, default=2.0)
+    ap.add_argument("--inject-faults", type=int, default=0, metavar="N",
+                    help="fault-injection demo: fail the first N engine "
+                         "dispatches with InjectedCrashError and let the "
+                         "retry path heal them (docs/FAULT_TOLERANCE.md)")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="serve retries per drain (default: 0, or 3 when "
+                         "--inject-faults is on)")
+    ap.add_argument("--request-deadline-ms", type=float, default=None,
+                    help="per-request submit->serve budget; expired "
+                         "requests fail with DeadlineExceededError")
     args = ap.parse_args()
     if args.smoke:
         args.n_train, args.m, args.requests = 128, 16, 16
@@ -57,14 +68,27 @@ def _run(args):
     x = jnp.asarray(kpca_dataset(args.n_train, m=args.m, seed=0))
     model = oos.fit_central(x, KernelSpec(kind="rbf"),
                             n_components=args.components, center=True)
+    retries = args.max_retries if args.max_retries is not None \
+        else (3 if args.inject_faults else 0)
     cfg = KpcaServeConfig(max_batch=args.max_batch,
                           queue_factor=args.queue_factor,
                           admission=args.admission,
-                          flush_max_wait_s=args.flush_wait_ms / 1e3)
+                          flush_max_wait_s=args.flush_wait_ms / 1e3,
+                          max_retries=retries,
+                          retry_backoff_s=0.005,
+                          request_deadline_s=(
+                              args.request_deadline_ms / 1e3
+                              if args.request_deadline_ms is not None
+                              else None))
     handle = ModelHandle(model)
-    eng = KpcaEngine(handle, cfg)
-    for b in cfg.buckets():                        # warm every bucket
-        eng.project_many([np.zeros((b, args.m), np.float32)])
+    inject = (transient_faults(args.inject_faults)
+              if args.inject_faults else None)
+    eng = KpcaEngine(handle, cfg, inject_fault=inject)
+    # warm every bucket through a fault-free twin so injected faults hit
+    # the measured run, not the compile warm-up
+    warm = KpcaEngine(handle, cfg)
+    for b in cfg.buckets():
+        warm.project_many([np.zeros((b, args.m), np.float32)])
     eng.stats = type(eng.stats)()
 
     # No lock: each submitter thread writes ONLY its own slot (index tid),
@@ -95,7 +119,13 @@ def _run(args):
         version = handle.refresh(model.coefs)
         for t in threads:
             t.join()
-        done = [f.result(timeout=60.0) for fs in futures for f in fs]
+        done, faulted = [], 0
+        for fs in futures:
+            for f in fs:
+                try:
+                    done.append(f.result(timeout=60.0))
+                except FaultError:             # typed, never a hang
+                    faulted += 1
     dt = time.perf_counter() - t0
 
     st = eng.stats
@@ -115,6 +145,11 @@ def _run(args):
         print(f"admission: bound={cfg.queue_capacity()} rows "
               f"policy={args.admission} rejected={sum(rejected)} "
               f"shed={st.n_shed}")
+    if args.inject_faults or args.request_deadline_ms is not None:
+        print(f"faults: injected={args.inject_faults} "
+              f"retries={st.n_retries} "
+              f"deadline_expired={st.n_deadline_expired} "
+              f"faulted_futures={faulted}")
 
 
 if __name__ == "__main__":

@@ -60,6 +60,8 @@ class EngineStats:
     n_rejected: int = 0           # admissions refused (QueueFullError)
     n_shed: int = 0               # queued requests dropped to admit newer
     n_flushes: int = 0            # drain cycles that served >= 1 request
+    n_retries: int = 0            # drain attempts retried after a fault
+    n_deadline_expired: int = 0   # requests failed on the request deadline
     total_time_s: float = 0.0
     # Ring of the most recent PER_REQUEST_WINDOW requests (bounded: a
     # long-running async engine must not accumulate one record per request

@@ -48,6 +48,7 @@ import numpy as np
 
 from ..core import oos
 from ..core.oos import FittedKpca, ShardedFittedKpca
+from ..faults.errors import DeadlineExceededError
 from ..obs import metrics, trace
 from .batching import (EngineStats, QueueFullError, RequestFuture,
                        RequestQueue, RequestStats, iter_slabs, pow2_buckets)
@@ -68,6 +69,16 @@ class KpcaServeConfig:
     flush_max_wait_s: float = 0.005   # deadline trigger: max queue wait of
     #                                   the oldest request before a flush
     flush_min_queries: Optional[int] = None  # size trigger (None: max_batch)
+    # -- fault tolerance (docs/FAULT_TOLERANCE.md) -------------------------
+    max_retries: int = 0          # extra serve attempts per drain; 0 keeps
+    #                               the fail-fast contract (a failed batch
+    #                               fails exactly its own futures)
+    retry_backoff_s: float = 0.02     # base backoff, doubled per attempt
+    #                                   (skipped when on_fault healed it)
+    request_deadline_s: Optional[float] = None  # submit -> serve budget;
+    #                               expired requests fail with
+    #                               DeadlineExceededError instead of being
+    #                               served late (None = no deadline)
 
     def buckets(self) -> List[int]:
         """Power-of-two widths: min_bucket, 2*min_bucket, ..., max_batch."""
@@ -114,7 +125,8 @@ class KpcaEngine:
 
     def __init__(self,
                  model: Union[FittedKpca, ShardedFittedKpca, ModelHandle],
-                 cfg: KpcaServeConfig = None, mesh=None):
+                 cfg: KpcaServeConfig = None, mesh=None,
+                 inject_fault=None, on_fault=None):
         """Args:
           model: servable artifact (plain or sharded) or a ``ModelHandle``
             wrapping one (live-publishable).
@@ -123,11 +135,24 @@ class KpcaEngine:
           mesh: for sharded models only — 1-D device mesh with
             ``model.n_shards`` devices; None builds one over local devices
             (or falls back to a same-math single-device reduction).
+          inject_fault: optional ``model -> None`` hook called at the top
+            of every drain attempt with the snapshotted model; raising
+            aborts the attempt. The deterministic chaos tests use it
+            (``repro.faults.serving.ShardLossInjector``) to stand in for
+            a dead shard host — production engines leave it None.
+          on_fault: optional ``(exc, handle) -> bool`` recovery hook
+            called when a drain attempt fails and retries remain.
+            Returning True means "handled — retry immediately" (e.g.
+            ``ShardRebalancer`` republished a survivor model, which the
+            next attempt picks up because every attempt re-reads the
+            handle); False falls back to exponential backoff.
         """
         self.handle = model if isinstance(model, ModelHandle) \
             else ModelHandle(model)
         model = self.handle.current()
         self.cfg = cfg or KpcaServeConfig()
+        self._inject_fault = inject_fault
+        self._on_fault = on_fault
         self._buckets = self.cfg.buckets()
         # _dispatch_lock orders concurrent drains' device programs; it is
         # held only across the (async) dispatch calls, never across a
@@ -165,6 +190,11 @@ class KpcaEngine:
             "serve_request_latency_seconds", "Per-request device wall time")
         self._m_wait = metrics.histogram(
             "serve_queue_wait_seconds", "Submit -> start-of-serve wait")
+        self._m_retries = metrics.counter(
+            "serve_retries_total", "Drain attempts retried after a fault")
+        self._m_expired = metrics.counter(
+            "serve_deadline_expired_total",
+            "Requests failed on the per-request deadline")
 
         if isinstance(model, ShardedFittedKpca):
             from .sharded import project_sharded
@@ -237,18 +267,24 @@ class KpcaEngine:
         """Serve every queued request synchronously; resolves the futures
         and returns {request_id: (Q, C) scores}.
 
-        On failure the queued requests are restored (ahead of anything
-        submitted meanwhile), so a crashed flush can simply be retried.
+        On failure (after ``cfg.max_retries`` attempts) the still-live
+        queued requests are restored (ahead of anything submitted
+        meanwhile), so a crashed flush can simply be retried. Requests
+        past ``cfg.request_deadline_s`` fail with
+        ``DeadlineExceededError`` instead of being restored.
         """
         entries = self._queue.drain()
         if not entries:
             return {}
+        entries = list(entries)
         try:
-            out = self._serve(entries)
+            out, served = self._serve_with_recovery(entries)
         except BaseException:
+            # `entries` was pruned in place: expired futures are already
+            # failed and must not re-enter the queue.
             self._queue.restore(entries)
             raise
-        self._resolve(entries, out)
+        self._resolve(served, out)
         return out
 
     def project_many(self, requests: Sequence[Any]) -> List[np.ndarray]:
@@ -317,14 +353,15 @@ class KpcaEngine:
             entries = self._queue.drain()
             if not entries:
                 continue
+            entries = list(entries)
             try:
-                out = self._serve(entries)
+                out, served = self._serve_with_recovery(entries)
             except BaseException as e:       # fail THIS batch, keep serving
                 for en in entries:
                     if not en.future.done():
                         en.future.set_exception(e)
                 continue
-            self._resolve(entries, out)
+            self._resolve(served, out)
 
     @staticmethod
     def _resolve(entries, out: dict) -> None:
@@ -335,10 +372,81 @@ class KpcaEngine:
 
     # ---- internals -------------------------------------------------------
 
+    def _expire(self, entries: list) -> list:
+        """Split off deadline-expired requests; their futures fail NOW
+        with ``DeadlineExceededError`` (typed, never served late).
+        Returns the still-live entries."""
+        ddl = self.cfg.request_deadline_s
+        if ddl is None:
+            return entries
+        now = time.monotonic()
+        live, n_expired = [], 0
+        for e in entries:
+            waited = now - e.t_submit
+            if waited > ddl:
+                n_expired += 1
+                if not e.future.done():
+                    e.future.set_exception(DeadlineExceededError(waited, ddl))
+            else:
+                live.append(e)
+        if n_expired:
+            with self._stats_lock:
+                self.stats.n_deadline_expired += n_expired
+            self._m_expired.inc(n_expired)
+            if trace.is_enabled():
+                trace.instant("serve.deadline_expired", n=n_expired)
+        return live
+
+    def _serve_with_recovery(self, entries: list) -> tuple:
+        """``_serve`` under the fault-tolerance contract: drop expired
+        requests before every attempt, retry up to ``cfg.max_retries``
+        times after a failure (invoking ``on_fault`` between attempts —
+        every attempt re-reads the handle, so a recovery publish heals
+        the retry), and raise only once retries are exhausted.
+
+        Prunes ``entries`` IN PLACE to the still-live subset (callers
+        use it for restore-on-error) and returns ``(out, served)``.
+        With ``max_retries=0`` and no deadline this is exactly one
+        ``_serve`` call — the pre-fault-layer behavior.
+        """
+        attempt = 0
+        while True:
+            live = self._expire(entries)
+            entries[:] = live
+            if not live:
+                return {}, []
+            try:
+                return self._serve(live), live
+            except BaseException as e:
+                if attempt >= self.cfg.max_retries:
+                    raise
+                attempt += 1
+                handled = False
+                if self._on_fault is not None:
+                    # A recovery-hook crash must not eat the original
+                    # fault: log it into the trace and fall back to
+                    # plain backoff.
+                    try:
+                        handled = bool(self._on_fault(e, self.handle))
+                    except BaseException:
+                        handled = False
+                with self._stats_lock:
+                    self.stats.n_retries += 1
+                self._m_retries.inc()
+                if trace.is_enabled():
+                    trace.instant("serve.retry", attempt=attempt,
+                                  error=type(e).__name__, handled=handled)
+                if not handled:
+                    # Interruptible backoff: close() must not wait it out.
+                    self._stop.wait(
+                        self.cfg.retry_backoff_s * (2 ** (attempt - 1)))
+
     def _serve(self, entries) -> dict:
         # One consistent (model, version) snapshot for the whole drain:
         # in-flight slabs finish on it even if a publish lands mid-drain.
         model, version = self.handle.get()
+        if self._inject_fault is not None:
+            self._inject_fault(model)
         t_start = time.monotonic()
 
         # Three-phase drain so no device sync ever happens under a lock:

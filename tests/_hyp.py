@@ -1,33 +1,104 @@
 """Optional-``hypothesis`` shim for the test suite.
 
 The property-based tests use hypothesis when it is installed (see
-requirements-dev.txt); without it, only the ``@given`` tests are skipped —
-the rest of each module still runs. Import from here instead of hypothesis:
+requirements-dev.txt); without it, a small DETERMINISTIC fallback engine
+runs instead — each ``@given`` test executes ``max_examples`` seeded
+random examples (seed derived from the test's qualified name, so runs
+are reproducible and order-independent) rather than being skipped.
+The fallback implements just the strategy surface this suite uses
+(``integers``, ``floats``, ``booleans``, ``sampled_from``, ``lists``,
+``tuples``, ``just``); anything fancier belongs behind a real
+hypothesis install. Import from here instead of hypothesis:
 
     from _hyp import given, settings, st
 """
 
-import pytest
+import functools
+import random
+import zlib
 
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
     HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover - exercised when hypothesis absent
+except ImportError:
     HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 25
 
-    def given(*_args, **_kwargs):
-        return pytest.mark.skip(reason="hypothesis not installed")
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
 
-    def settings(*_args, **_kwargs):
-        return lambda f: f
+        def example(self, rng):
+            return self._draw(rng)
 
-    class _AnyStrategy:
-        """Stands in for ``strategies.*`` calls made at decoration time."""
+    class _St:
+        """The ``strategies`` surface the suite uses, seeded-RNG backed."""
 
-        def __getattr__(self, _name):
-            return lambda *a, **k: None
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
-    st = _AnyStrategy()
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strategies))
+
+    st = _St()
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args):
+                # max_examples: @settings may sit above (attribute lands on
+                # this wrapper) or below @given (attribute lands on fn).
+                n = getattr(wrapper, "_hyp_max_examples",
+                            getattr(fn, "_hyp_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for i in range(n):
+                    kw = {k: s.example(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kw)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (run {i} of "
+                            f"{fn.__qualname__}): {kw!r}") from e
+            # pytest resolves fixture names through __wrapped__'s signature;
+            # the strategy kwargs must NOT look like fixtures.
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kwargs):
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+        return deco
 
 __all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

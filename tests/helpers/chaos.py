@@ -1,0 +1,102 @@
+"""Chaos-test harness: deterministic fault scenarios with zero sleeps.
+
+Helpers shared by tests/test_fault_injection.py. Synchronization is
+event/future-based throughout — a chaos test that needs ``time.sleep``
+to pass is itself timing-dependent, which is exactly the flakiness the
+fault layer exists to rule out (the ``sleep-in-test`` repro-lint rule
+enforces this repo-wide).
+"""
+
+import concurrent.futures
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KernelSpec, central_kpca, oos, similarity
+from repro.data import kpca_dataset
+from repro.faults import FaultTolerantRun
+
+
+def run_to_end(run: FaultTolerantRun):
+    """Drive a fault-tolerant run to completion; returns the chunk list."""
+    return list(run.chunks())
+
+
+def survivor_similarities(run: FaultTolerantRun, spec: KernelSpec,
+                          n_components: int = 1):
+    """Per-survivor similarity of the run's final alpha against the
+    survivor-pooled CENTRAL solution under the run's pinned gamma —
+    the paper's consistency metric, restricted to who is left."""
+    nodes = np.asarray(run.x_nodes)
+    pooled = nodes.reshape(-1, nodes.shape[-1])
+    ag, _, _ = central_kpca(jnp.asarray(pooled), spec, n_components,
+                            gamma=run.gamma)
+    return [float(similarity(run.state.alpha[j], jnp.asarray(nodes[j]),
+                             ag[:, 0], jnp.asarray(pooled), spec,
+                             gamma=run.gamma))
+            for j in range(nodes.shape[0])]
+
+
+def make_sharded_handle(n_train=96, m=12, n_shards=4, n_components=2,
+                        seed=0):
+    """(handle-able sharded model, its source FittedKpca) on RBF data."""
+    x = jnp.asarray(kpca_dataset(n_train, m=m, seed=seed))
+    model = oos.fit_central(x, KernelSpec(kind="rbf"),
+                            n_components=n_components, center=True)
+    sharded, _ = oos.shard_fitted(model, n_shards)
+    return sharded, model
+
+
+def hammer_submit(engine, n_threads: int, requests_each: int, make_query,
+                  collect_submit_errors=False):
+    """Submit from ``n_threads`` concurrent threads (barrier-released so
+    they really race), return every future.
+
+    ``make_query(tid, i)`` builds each request payload. Futures are
+    appended to per-thread slots (no lock needed: slot-per-thread, read
+    after join). With ``collect_submit_errors`` admission failures are
+    returned too instead of propagating.
+    """
+    futures = [[] for _ in range(n_threads)]
+    submit_errors = [[] for _ in range(n_threads)]
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        barrier.wait()
+        for i in range(requests_each):
+            try:
+                futures[tid].append(engine.submit(make_query(tid, i)))
+            except Exception as e:
+                if not collect_submit_errors:
+                    raise
+                submit_errors[tid].append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    flat = [f for fs in futures for f in fs]
+    errs = [e for es in submit_errors for e in es]
+    return (flat, errs) if collect_submit_errors else flat
+
+
+def settle(futures, timeout_s: float = 30.0):
+    """Wait for EVERY future to resolve; zero hangs allowed.
+
+    Returns (results, exceptions) — each future lands in exactly one
+    list. Asserts none are still pending at the timeout (the
+    fault-tolerance contract: success or typed error, never a hang).
+    """
+    done, pending = concurrent.futures.wait(futures, timeout=timeout_s)
+    assert not pending, f"{len(pending)} futures hung past {timeout_s}s"
+    results, errors = [], []
+    for f in futures:
+        exc = f.exception(timeout=0)
+        if exc is None:
+            results.append(f.result(timeout=0))
+        else:
+            errors.append(exc)
+    return results, errors

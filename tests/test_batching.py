@@ -109,7 +109,7 @@ class TestRequestQueue:
         t.start()
         try:
             q.put("a", n=2)
-            time.sleep(0.05)
+            t.join(timeout=0.05)
             assert t.is_alive()                # 2 < 4 rows: still waiting
             q.put("b", n=2)                    # size trigger fires
             t.join(timeout=5.0)
@@ -138,7 +138,8 @@ class TestRequestQueue:
         t = threading.Thread(target=waiter)
         t.start()
         try:
-            time.sleep(0.05)
+            t.join(timeout=0.05)
+            assert t.is_alive()                # nothing queued: still waiting
             stop.set()
             q.kick()
             t.join(timeout=5.0)

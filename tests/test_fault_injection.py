@@ -1,0 +1,558 @@
+"""Fault-injection chaos tests: the stack survives what the plan injects.
+
+Four layers, all deterministic (seeded FaultPlan — same seed, same
+trajectory, asserted bitwise):
+
+- plan/compile: FaultPlan schema round-trip, seeded generation, link-mask
+  compilation semantics (receiver-side censoring, self slot immune).
+- solver: FaultyComm censoring, link-loss/straggler degradation, and the
+  HEADLINE recovery property — dropping 2 of 12 nodes mid-ADMM re-knits,
+  shrinks the state (warm carry, no restart) and still converges to the
+  survivor-pooled central solution (>= 0.95 similarity, measured ~0.999).
+- SPMD parity: the ring transport under the same link mask matches the
+  dense path to fp32 tolerance.
+- serving: shard loss under concurrent load resolves EVERY in-flight
+  future (success or typed FaultError — zero hangs) with exactly one
+  atomic re-balance publish; per-request deadlines; publisher crashes;
+  bounded retry-with-backoff. Runs under the lockcheck plugin with
+  recovery spans visible in the exported Chrome trace.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers.chaos import (hammer_submit, make_sharded_handle, run_to_end,
+                           settle, survivor_similarities)
+from repro.core import KernelSpec, build_setup, oos
+from repro.core.solver import DenseComm, init_state, load_state, run_chunked
+from repro.core.topology import reknit, ring
+from repro.data import node_dataset
+from repro.faults import (CrashingHandle, DeadlineExceededError, FaultError,
+                          FaultPlan, FaultTolerantRun, FaultyComm,
+                          InjectedCrashError, LinkFault, NodeDropout,
+                          PublisherCrash, ShardLoss, ShardLossInjector,
+                          ShardLostError, ShardRebalancer, StragglerStall,
+                          link_delay, shrink_state, transient_faults)
+from repro.obs import trace
+from repro.serve import KpcaEngine, KpcaServeConfig, ModelHandle
+from repro.serve.publisher import BackgroundPublisher
+
+SPEC = KernelSpec(kind="rbf")
+WAIT = 30.0
+
+
+@pytest.fixture(autouse=True)
+def _no_global_tracer():
+    yield
+    trace.disable()
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+
+
+class TestFaultPlan:
+    def test_random_is_deterministic(self):
+        kw = dict(n_nodes=12, n_iters=40, n_dropouts=2, n_link_faults=3,
+                  n_stragglers=1)
+        a = FaultPlan.random(7, **kw)
+        b = FaultPlan.random(7, **kw)
+        assert a == b
+        assert a != FaultPlan.random(8, **kw)
+
+    def test_random_respects_survivor_floor_and_protection(self):
+        plan = FaultPlan.random(3, n_nodes=6, n_dropouts=3, n_iters=20,
+                                protect=[0, 1])
+        dropped = {d.node for d in plan.dropouts}
+        assert len(dropped) == 3 and not dropped & {0, 1}
+        with pytest.raises(ValueError):
+            FaultPlan.random(0, n_nodes=4, n_dropouts=3, n_iters=10)
+
+    def test_dict_round_trip(self):
+        plan = FaultPlan(
+            seed=5,
+            dropouts=(NodeDropout(t=3, node=1),),
+            links=(LinkFault(t0=2, t1=6, u=0, v=2, directed=True),),
+            stragglers=(StragglerStall(t0=1, t1=4, node=3),),
+            shard_losses=(ShardLoss(at_dispatch=2, shard=1),),
+            publisher_crashes=(PublisherCrash(at_job=0),))
+        assert FaultPlan.from_dict(plan.to_dict()) == plan
+        assert FaultPlan.from_dict(json.loads(json.dumps(plan.to_dict()))) \
+            == plan
+
+    def test_link_delay_is_censoring_window(self):
+        lf = link_delay(4, 3, u=1, v=2)
+        assert (lf.t0, lf.t1) == (4, 7) and not lf.directed
+
+    def test_link_mask_censors_receiver_side_slots(self):
+        graph = ring(6, hops=1)
+        setup = build_setup(
+            jnp.asarray(node_dataset(6, 8, m=4, seed=0)[0]), graph, SPEC)
+        src = np.asarray(setup.src)
+        mask = np.asarray(setup.mask)
+        plan = FaultPlan(links=(LinkFault(t0=2, t1=4, u=0, v=1,
+                                          directed=True),))
+        lm = plan.link_mask(src, mask, 0, 5)
+        assert lm.shape == (5, 6, src.shape[1])
+        # directed u <- v: only node 0's slot sourcing node 1 is censored,
+        # only for t in [2, 4)
+        slot01 = np.nonzero(src[0, 1:] == 1)[0] + 1
+        assert slot01.size == 1
+        assert (lm[2:4, 0, slot01] == 0.0).all()
+        assert (lm[:2, 0, slot01] == 1.0).all() and lm[4, 0, slot01] == 1.0
+        # the reverse direction (1 <- 0) stays up
+        slot10 = np.nonzero(src[1, 1:] == 0)[0] + 1
+        assert (lm[:, 1, slot10] == 1.0).all()
+        # self slots are never censored
+        assert (lm[:, :, 0] == 1.0).all()
+
+    def test_straggler_censors_all_incident_links_both_ways(self):
+        graph = ring(6, hops=1)
+        setup = build_setup(
+            jnp.asarray(node_dataset(6, 8, m=4, seed=0)[0]), graph, SPEC)
+        src = np.asarray(setup.src)
+        plan = FaultPlan(stragglers=(StragglerStall(t0=1, t1=3, node=2),))
+        lm = plan.link_mask(src, np.asarray(setup.mask), 0, 4)
+        for u in (1, 3):                        # ring neighbors of node 2
+            s_in = np.nonzero(src[u, 1:] == 2)[0] + 1
+            assert (lm[1:3, u, s_in] == 0.0).all()
+            s_out = np.nonzero(src[2, 1:] == u)[0] + 1
+            assert (lm[1:3, 2, s_out] == 0.0).all()
+        assert (lm[0] == 1.0).all() and (lm[3] == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# transport censoring
+
+
+class TestFaultyComm:
+    def test_exchange_zeroes_masked_slots_and_delegates(self):
+        # 3-node complete-ish routing: src[j, s] built by hand
+        src = np.array([[0, 1, 2], [1, 2, 0], [2, 0, 1]], np.int32)
+        rsl = np.zeros((3, 3), np.int32)
+        base = DenseComm(src, rsl)
+        cols = jnp.asarray(
+            np.arange(3 * 3 * 4, dtype=np.float32).reshape(3, 3, 4))
+        mask = jnp.asarray([[1.0, 0.0, 1.0],
+                            [1.0, 1.0, 1.0],
+                            [1.0, 1.0, 0.0]])
+        fc = FaultyComm(base, mask)
+        out = np.asarray(fc.exchange(cols))
+        ref = np.asarray(base.exchange(cols))
+        assert (out[0, 1] == 0.0).all() and (out[2, 2] == 0.0).all()
+        keep = np.asarray(mask, bool)
+        assert (out[keep] == ref[keep]).all()
+        # unmasked view is a pass-through; with_mask rebinds cheaply
+        assert (np.asarray(FaultyComm(base).exchange(cols)) == ref).all()
+        assert FaultyComm(base).with_mask(mask).mask is mask
+        assert fc.ledger is None
+
+
+# ---------------------------------------------------------------------------
+# solver-side recovery (the headline)
+
+
+def _headline_run(chunk=5, n_iters=40):
+    nodes, _ = node_dataset(12, 40, m=24, seed=4)
+    plan = FaultPlan(seed=7, dropouts=(NodeDropout(t=15, node=3),
+                                       NodeDropout(t=15, node=7)))
+    return FaultTolerantRun(nodes, ring(12, hops=2), SPEC, plan,
+                            n_iters=n_iters, chunk=chunk)
+
+
+class TestAdmmDropoutRecovery:
+    def test_mid_admm_dropout_recovers_without_refit(self):
+        """Drop 2 of 12 nodes at t=15 of 40: the survivors re-knit, carry
+        their warm state (no restart — t keeps counting) and converge to
+        the survivor-pooled central solution."""
+        run = _headline_run()
+        chunks = run_to_end(run)
+        assert int(run.state.t) == 40          # 40 total, NOT 15 + 40
+        assert run.n_reknits == 1
+        assert sorted(run.node_ids) == [0, 1, 2, 4, 5, 6, 8, 9, 10, 11]
+        assert run.state.alpha.shape == (10, 40)
+        kinds = [e.kind for e in run.events]
+        assert kinds == ["dropout"]
+        sims = survivor_similarities(run, SPEC)
+        assert np.mean(sims) >= 0.95, sims
+        assert np.min(sims) >= 0.95, sims
+        # chunk boundaries: the dropout instant clamps the running chunk
+        assert sum(int(c.alpha_hist.shape[0]) for c in chunks) == 40
+
+    def test_same_seed_same_trajectory_bitwise(self):
+        a = _headline_run()
+        run_to_end(a)
+        b = _headline_run()
+        run_to_end(b)
+        assert (np.asarray(a.state.alpha) == np.asarray(b.state.alpha)).all()
+        assert (np.asarray(a.state.b) == np.asarray(b.state.b)).all()
+
+    def test_chunk_size_does_not_change_detection_point(self):
+        """Detection happens at the fault instant regardless of chunk size
+        (the driver clamps the running chunk), so the trajectory is
+        chunk-invariant exactly like the fault-free driver."""
+        a = _headline_run(chunk=5, n_iters=20)
+        run_to_end(a)
+        b = _headline_run(chunk=7, n_iters=20)
+        run_to_end(b)
+        assert (np.asarray(a.state.alpha) == np.asarray(b.state.alpha)).all()
+
+    def test_recovery_emits_counters_and_spans(self):
+        t = trace.enable()
+        run = _headline_run(n_iters=16)        # one iter past the dropout
+        run_to_end(run)
+        names = [e[1] for e in t.events()]
+        assert "fault.injected" in names
+        assert "fault.recovery" in names
+
+    def test_dropout_outside_run_rejected(self):
+        nodes, _ = node_dataset(4, 8, m=4, seed=0)
+        plan = FaultPlan(dropouts=(NodeDropout(t=30, node=1),))
+        with pytest.raises(ValueError):
+            FaultTolerantRun(nodes, ring(4, 1), SPEC, plan, n_iters=10)
+
+
+class TestLinkFaultDegradation:
+    def test_link_loss_window_still_converges(self):
+        nodes, _ = node_dataset(12, 40, m=24, seed=4)
+        plan = FaultPlan(seed=3,
+                         links=(LinkFault(t0=5, t1=12, u=0, v=2),
+                                link_delay(8, 4, u=3, v=5)),
+                         stragglers=(StragglerStall(t0=10, t1=14, node=6),))
+        run = FaultTolerantRun(nodes, ring(12, hops=2), SPEC, plan,
+                               n_iters=40, chunk=8)
+        run_to_end(run)
+        assert run.n_reknits == 0              # degradation, not dropout
+        sims = survivor_similarities(run, SPEC)
+        assert np.mean(sims) >= 0.95, sims
+
+    def test_censored_run_differs_from_clean_then_matches_itself(self):
+        nodes, _ = node_dataset(6, 16, m=8, seed=1)
+        plan = FaultPlan(links=(LinkFault(t0=2, t1=9, u=0, v=1),))
+        kw = dict(n_iters=12, chunk=4)
+        faulty = FaultTolerantRun(nodes, ring(6, 1), SPEC, plan, **kw)
+        run_to_end(faulty)
+        again = FaultTolerantRun(nodes, ring(6, 1), SPEC, plan, **kw)
+        run_to_end(again)
+        clean = FaultTolerantRun(nodes, ring(6, 1), SPEC, FaultPlan(), **kw)
+        run_to_end(clean)
+        a, b, c = (np.asarray(r.state.alpha) for r in (faulty, again, clean))
+        assert (a == b).all()                  # deterministic injection
+        assert not np.allclose(a, c)           # and it actually bit
+
+    @pytest.mark.skipif(jax.device_count() < 4, reason="needs 4 host devices")
+    def test_spmd_link_mask_matches_dense(self):
+        """RingComm under the same censoring mask replays the dense
+        trajectory (fp32 tolerance) — FaultyComm composes with both
+        transports."""
+        from repro.core.dkpca import dkpca_distributed
+        from repro.faults.plan import ring_slot_tables
+        from repro.launch.mesh import make_mesh
+        nodes, _ = node_dataset(4, 12, 8, seed=0)
+        plan = FaultPlan(links=(LinkFault(t0=3, t1=6, u=0, v=1),
+                                LinkFault(t0=5, t1=8, u=2, v=3,
+                                          directed=True)))
+        n_iters = 12
+        setup = build_setup(jnp.asarray(nodes), ring(4, 1), SPEC)
+        alpha0 = jax.random.normal(jax.random.PRNGKey(0), (4, 12),
+                                   jnp.float32)
+        lm_dense = plan.link_mask(np.asarray(setup.src),
+                                  np.asarray(setup.mask), 0, n_iters)
+        state = init_state(alpha0, setup.n_slots)
+        for res in run_chunked(setup, n_iters=n_iters, chunk=4, state=state,
+                               link_mask=lm_dense):
+            state = res.state
+        src_r, mask_r = ring_slot_tables(4, 1)
+        lm_ring = plan.link_mask(src_r, mask_r, 0, n_iters)
+        out = dkpca_distributed(
+            nodes, make_mesh((4,), ("data",)), axis_names=("data",), hops=1,
+            spec=SPEC, center="global", n_iters=n_iters, alpha0=alpha0,
+            gamma=float(setup.gamma), link_mask=lm_ring)
+        np.testing.assert_allclose(np.asarray(state.alpha),
+                                   np.asarray(out.alpha), atol=2e-5)
+
+
+class TestShrinkState:
+    def test_surviving_edges_carry_duals_new_edges_start_cold(self):
+        nodes, _ = node_dataset(6, 10, m=6, seed=2)
+        graph = ring(6, hops=1)
+        setup = build_setup(jnp.asarray(nodes), graph, SPEC)
+        state = init_state(
+            jax.random.normal(jax.random.PRNGKey(1), (6, 10), jnp.float32),
+            setup.n_slots)
+        for res in run_chunked(setup, n_iters=4, chunk=4, state=state):
+            state = res.state
+        new_graph, surv = reknit(graph, [2])
+        shrunk = shrink_state(state, graph, new_graph, surv)
+        assert shrunk.alpha.shape[0] == 5
+        assert int(shrunk.t) == int(state.t)
+        assert (np.asarray(shrunk.rho) == 0.0).all()
+        b_old = np.asarray(state.b)
+        b_new = np.asarray(shrunk.b)
+        old_ids, _, old_mask = graph.neighbor_array()
+        new_ids, _, new_mask = new_graph.neighbor_array()
+        surv = [int(v) for v in surv]
+        for nj, o in enumerate(surv):
+            assert (b_new[nj, :, 0] == b_old[o, :, 0]).all()
+            old_slot = {int(old_ids[o, d]): d + 1
+                        for d in range(old_ids.shape[1]) if old_mask[o, d]}
+            for d in range(new_ids.shape[1]):
+                if not new_mask[nj, d]:
+                    continue
+                l_orig = surv[int(new_ids[nj, d])]
+                col = b_new[nj, :, d + 1]
+                if l_orig in old_slot:
+                    assert (col == b_old[o, :, old_slot[l_orig]]).all()
+                else:
+                    assert (col == 0.0).all()   # re-knit edge: cold dual
+
+    def test_checkpointed_state_shrinks_identically(self, tmp_path):
+        """save_state -> load_state -> shrink == shrink of the live state:
+        recovery works the same from a checkpoint as from memory."""
+        nodes, _ = node_dataset(6, 10, m=6, seed=2)
+        graph = ring(6, hops=1)
+        setup = build_setup(jnp.asarray(nodes), graph, SPEC)
+        state = None
+        for res in run_chunked(setup, n_iters=4, chunk=4, seed=0,
+                               ckpt_dir=str(tmp_path)):
+            state = res.state
+        restored = load_state(str(tmp_path))
+        new_graph, surv = reknit(graph, [1, 4])
+        live = shrink_state(state, graph, new_graph, surv)
+        cold = shrink_state(restored, graph, new_graph, surv)
+        for name in ("alpha", "b", "g", "znorm2", "rho"):
+            assert (np.asarray(getattr(live, name))
+                    == np.asarray(getattr(cold, name))).all(), name
+        assert int(live.t) == int(cold.t)
+
+
+# ---------------------------------------------------------------------------
+# serving-side recovery
+
+
+class TestDropShard:
+    def test_dropped_shard_serves_survivor_scores(self):
+        sharded, _ = make_sharded_handle()
+        from repro.serve.sharded import project_sharded
+        dropped = oos.drop_shard(sharded, 2)
+        assert dropped.shard_sizes == (24, 24, 0, 24)
+        assert dropped.n_support == 72
+        assert dropped.n_shards == sharded.n_shards   # handle-compatible
+        xq = jnp.asarray(
+            np.random.default_rng(0).normal(size=(9, 12)), jnp.float32)
+        got = np.asarray(project_sharded(dropped, xq))
+        oracle = np.asarray(
+            oos.project(oos.gather_fitted(dropped), xq))
+        np.testing.assert_allclose(got, oracle, atol=1e-5)
+        # centering was REBUILT for the survivor support set
+        assert not np.allclose(np.asarray(dropped.bias),
+                               np.asarray(sharded.bias))
+
+    def test_idempotent_and_validated(self):
+        sharded, _ = make_sharded_handle()
+        once = oos.drop_shard(sharded, 1)
+        assert oos.drop_shard(once, 1) is once
+        with pytest.raises(ValueError):
+            oos.drop_shard(sharded, 9)
+        with pytest.raises(TypeError):
+            oos.drop_shard(object(), 0)
+
+    def test_cannot_drop_every_shard(self):
+        sharded, _ = make_sharded_handle(n_shards=2)
+        one = oos.drop_shard(sharded, 0)
+        with pytest.raises(ValueError):
+            oos.drop_shard(one, 1)
+
+    def test_publish_through_pinned_handle(self):
+        sharded, _ = make_sharded_handle()
+        handle = ModelHandle(sharded)
+        v0 = handle.version
+        handle.publish(oos.drop_shard(sharded, 0))   # same n_shards: OK
+        assert handle.version == v0 + 1
+
+
+@pytest.mark.lockcheck
+class TestServingShardLoss:
+    """The serving acceptance scenario, under the lock-order checker."""
+
+    def _scenario(self):
+        sharded, _ = make_sharded_handle()
+        # at_dispatch=0: the FIRST drain (and any later one that still
+        # sees live rows in shard 1) hits the loss — deterministic no
+        # matter how the flusher coalesces the 24 concurrent submits.
+        plan = FaultPlan(seed=0,
+                         shard_losses=(ShardLoss(at_dispatch=0, shard=1),))
+        injector = ShardLossInjector(plan)
+        rebalancer = ShardRebalancer()
+        handle = ModelHandle(sharded)
+        cfg = KpcaServeConfig(max_batch=16, min_bucket=8,
+                              flush_max_wait_s=0.001,
+                              max_retries=4, retry_backoff_s=0.005,
+                              request_deadline_s=WAIT)
+        eng = KpcaEngine(handle, cfg, inject_fault=injector,
+                         on_fault=rebalancer)
+        return eng, handle, injector, rebalancer
+
+    def test_shard_loss_under_load_zero_hangs_one_publish(self, tmp_path):
+        tracer = trace.enable()
+        eng, handle, injector, rebalancer = self._scenario()
+        v0 = handle.version
+
+        def make_query(tid, i):
+            rng = np.random.default_rng(100 * tid + i)
+            return rng.normal(size=(int(rng.integers(1, 9)), 12)) \
+                .astype(np.float32)
+
+        with eng:
+            futures = hammer_submit(eng, n_threads=3, requests_each=8,
+                                    make_query=make_query)
+            results, errors = settle(futures, timeout_s=WAIT)
+        # EVERY future resolved; failures (if any) are typed FaultErrors
+        assert len(results) + len(errors) == 24
+        assert all(isinstance(e, FaultError) for e in errors), errors
+        assert results, "recovery should let most requests succeed"
+        # exactly one atomic re-balance publish
+        assert rebalancer.n_rebalances == 1
+        assert handle.version == v0 + 1
+        assert injector.n_raised >= 1
+        assert handle.current().shard_sizes[1] == 0
+        # post-recovery scores match the survivor oracle
+        survivor = oos.gather_fitted(handle.current())
+        xq = np.random.default_rng(9).normal(size=(5, 12)).astype(np.float32)
+        out = eng.project_many([xq])[0]
+        np.testing.assert_allclose(
+            out, np.asarray(oos.project(survivor, jnp.asarray(xq))),
+            atol=1e-5)
+        # recovery span + injection instant land in the Chrome trace export
+        path = tmp_path / "chaos_trace.json"
+        tracer.export(str(path))
+        events = json.loads(path.read_text())["traceEvents"]
+        recov = [e for e in events if e["name"] == "fault.recovery"]
+        assert len(recov) == 1 and recov[0]["ph"] == "X"
+        assert recov[0]["args"]["kind"] == "shard_loss"
+        assert any(e["name"] == "fault.injected" for e in events)
+        assert any(e["name"] == "serve.retry" for e in events)
+
+    def test_rebalance_is_exactly_once_across_concurrent_retries(self):
+        sharded, _ = make_sharded_handle()
+        handle = ModelHandle(sharded)
+        rebalancer = ShardRebalancer()
+        exc = ShardLostError(2)
+        import threading
+        n_handled = []
+        lk = threading.Lock()
+        barrier = threading.Barrier(4)
+
+        def racer():
+            barrier.wait()
+            handled = rebalancer(exc, handle)
+            with lk:
+                n_handled.append(handled)
+
+        threads = [threading.Thread(target=racer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert n_handled == [True] * 4
+        assert rebalancer.n_rebalances == 1    # one publish, 3 observers
+        assert handle.current().shard_sizes[2] == 0
+
+
+class TestRetryAndDeadline:
+    def test_transient_fault_heals_within_retry_budget(self):
+        sharded, model = make_sharded_handle()
+        eng = KpcaEngine(ModelHandle(sharded),
+                         KpcaServeConfig(max_batch=16, min_bucket=8,
+                                         max_retries=3,
+                                         retry_backoff_s=0.001),
+                         inject_fault=transient_faults(2))
+        xq = np.random.default_rng(0).normal(size=(4, 12)).astype(np.float32)
+        fut = eng.submit(xq)
+        out = eng.flush()
+        assert fut.result(timeout=WAIT).shape == (4, 2)
+        assert out and eng.stats.n_retries == 2
+
+    def test_retries_exhausted_raises_typed_error(self):
+        sharded, _ = make_sharded_handle()
+        eng = KpcaEngine(ModelHandle(sharded),
+                         KpcaServeConfig(max_batch=16, min_bucket=8,
+                                         max_retries=1,
+                                         retry_backoff_s=0.001),
+                         inject_fault=transient_faults(10))
+        eng.submit(np.zeros((2, 12), np.float32))
+        with pytest.raises(InjectedCrashError):
+            eng.flush()
+
+    def test_max_retries_zero_keeps_fail_fast_contract(self):
+        sharded, _ = make_sharded_handle()
+        eng = KpcaEngine(ModelHandle(sharded),
+                         KpcaServeConfig(max_batch=16, min_bucket=8),
+                         inject_fault=transient_faults(1))
+        eng.submit(np.zeros((2, 12), np.float32))
+        with pytest.raises(InjectedCrashError):
+            eng.flush()
+        assert eng.stats.n_retries == 0
+        assert eng.flush()                     # restored entries now serve
+
+    def test_expired_requests_fail_typed_not_served_late(self):
+        sharded, _ = make_sharded_handle()
+        eng = KpcaEngine(ModelHandle(sharded),
+                         KpcaServeConfig(max_batch=16, min_bucket=8,
+                                         request_deadline_s=0.0))
+        fut = eng.submit(np.zeros((3, 12), np.float32))
+        out = eng.flush()                      # deadline 0: instantly stale
+        assert out == {}
+        with pytest.raises(DeadlineExceededError):
+            fut.result(timeout=0)
+        assert eng.stats.n_deadline_expired == 1
+
+    def test_async_faulted_batch_resolves_every_future(self):
+        """Flusher-side faults with retries exhausted: every in-flight
+        future resolves with the typed error — zero hangs."""
+        sharded, _ = make_sharded_handle()
+        eng = KpcaEngine(ModelHandle(sharded),
+                         KpcaServeConfig(max_batch=16, min_bucket=8,
+                                         flush_max_wait_s=0.001,
+                                         max_retries=1,
+                                         retry_backoff_s=0.001),
+                         inject_fault=transient_faults(1000))
+        with eng:
+            futures = hammer_submit(
+                eng, n_threads=2, requests_each=4,
+                make_query=lambda tid, i: np.zeros((2, 12), np.float32))
+            results, errors = settle(futures, timeout_s=WAIT)
+        assert len(errors) == 8 and not results
+        assert all(isinstance(e, InjectedCrashError) for e in errors)
+
+
+class TestPublisherCrash:
+    def test_background_publisher_survives_crashed_job(self):
+        sharded, model = make_sharded_handle()
+        plan = FaultPlan(publisher_crashes=(PublisherCrash(at_job=0),))
+        crashing = CrashingHandle(ModelHandle(model), plan)
+        with BackgroundPublisher(crashing) as pub:
+            pub.refresh(model.coefs)           # job 0: crashes in the worker
+            with pytest.raises(InjectedCrashError):
+                pub.drain(timeout=WAIT)        # the error is remembered
+            pub.refresh(model.coefs)           # worker is still alive
+            pub.drain(timeout=WAIT)            # and the next job lands
+        assert crashing.n_crashes == 1
+        assert crashing.version == 1
+
+    def test_engine_serves_stale_model_through_crash(self):
+        sharded, _ = make_sharded_handle()
+        plan = FaultPlan(publisher_crashes=(PublisherCrash(at_job=0),))
+        crashing = CrashingHandle(ModelHandle(sharded), plan)
+        eng = KpcaEngine(ModelHandle(sharded),
+                         KpcaServeConfig(max_batch=16, min_bucket=8))
+        xq = np.random.default_rng(1).normal(size=(4, 12)).astype(np.float32)
+        before = eng.project_many([xq])[0]
+        with pytest.raises(InjectedCrashError):
+            crashing.publish(oos.drop_shard(sharded, 0))
+        after = eng.project_many([xq])[0]      # crash never reached serving
+        np.testing.assert_array_equal(before, after)

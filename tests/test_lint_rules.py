@@ -538,6 +538,59 @@ class TestSpanNotClosed:
         """) == []
 
 
+class TestSleepInTest:
+    def test_time_sleep_in_test_file_flagged(self):
+        out = lint("""
+            import time
+            def test_worker_finishes(worker):
+                worker.start()
+                time.sleep(0.1)
+                assert worker.done
+        """, path="tests/test_worker.py")
+        assert rules_of(out) == ["sleep-in-test"]
+
+    def test_from_import_and_alias_flagged(self):
+        out = lint("""
+            from time import sleep as snooze
+            import time as clock
+            def test_x():
+                snooze(0.5)
+                clock.sleep(1)
+        """, path="tests/test_x.py")
+        assert rules_of(out) == ["sleep-in-test", "sleep-in-test"]
+
+    def test_helpers_and_conftest_are_in_scope(self):
+        out = lint("import time\ntime.sleep(1)\n",
+                   path="tests/helpers/util.py")
+        assert rules_of(out) == ["sleep-in-test"]
+        out = lint("import time\ntime.sleep(1)\n", path="tests/conftest.py")
+        assert rules_of(out) == ["sleep-in-test"]
+
+    def test_src_sleep_is_out_of_scope(self):
+        # production backoffs are not this rule's business
+        assert lint("import time\ndef backoff():\n    time.sleep(0.2)\n",
+                    path="src/repro/serve/kpca_engine.py") == []
+
+    def test_event_wait_join_and_unrelated_sleep_clean(self):
+        assert lint("""
+            import threading
+            def test_worker(worker, actor):
+                done = threading.Event()
+                worker.start(on_done=done.set)
+                assert done.wait(timeout=5.0)
+                worker.thread.join(timeout=1.0)
+                actor.sleep()              # not time.sleep: out of scope
+        """, path="tests/test_worker.py") == []
+
+    def test_pragma_suppresses_duration_sleep(self):
+        assert lint("""
+            import time
+            def test_span_duration(tracer):
+                with tracer.span("d"):
+                    time.sleep(0.002)  # repro-lint: disable=sleep-in-test
+        """, path="tests/test_obs.py") == []
+
+
 # ---------------------------------------------------------------------------
 # CLI + repo self-check
 
@@ -578,7 +631,7 @@ class TestCli:
         for rule in ("guarded-by", "blocking-in-lock", "thread-join",
                      "lock-order", "bare-acquire", "impure-jit",
                      "closure-capture", "interpret-literal",
-                     "donated-reuse", "span-not-closed"):
+                     "donated-reuse", "span-not-closed", "sleep-in-test"):
             assert rule in res.stdout
 
     def test_unknown_rule_is_usage_error(self):

@@ -51,7 +51,8 @@ class TestTracer:
     def test_span_records_duration_and_attrs(self):
         t = Tracer()
         with t.span("work", n=3):
-            time.sleep(0.002)
+            # a real measurable duration is the POINT of this test
+            time.sleep(0.002)  # repro-lint: disable=sleep-in-test
         (ev,) = t.events()
         ph, name, t0, dur, tid, attrs = ev
         assert (ph, name) == ("X", "work")
@@ -152,6 +153,51 @@ class TestDisabledTracerIsFree:
         with pytest.raises(RuntimeError):
             trace.export("/dev/null")
 
+    def test_fault_paths_allocate_nothing_while_disabled(self):
+        """The fault-injection layer must be observability-free when
+        tracing is off: FaultyComm censoring and the engine's
+        retry/recovery loop emit through pre-created module-level
+        counters and ``is_enabled()``-guarded trace calls — no per-call
+        metric creation, no span retention."""
+        from repro.data import kpca_dataset
+        from repro.faults import FaultyComm, transient_faults
+        from repro.serve import KpcaEngine, KpcaServeConfig, ModelHandle
+
+        trace.disable()
+        src = np.array([[0, 1], [1, 0]], np.int32)
+        comm = FaultyComm(solver.DenseComm(src, np.zeros((2, 2), np.int32)),
+                          jnp.ones((2, 2), jnp.float32))
+        cols = jnp.ones((2, 2, 3), jnp.float32)
+        model = oos.fit_central(jnp.asarray(kpca_dataset(24, m=6, seed=0)),
+                                KernelSpec(kind="rbf"), n_components=2)
+
+        def retry_once():
+            eng = KpcaEngine(
+                ModelHandle(model),
+                KpcaServeConfig(max_batch=8, min_bucket=8, max_retries=2,
+                                retry_backoff_s=0.0),
+                inject_fault=transient_faults(1))
+            eng.submit(np.zeros((2, 6), np.float32))
+            eng.flush()
+
+        comm.exchange(cols)                  # warm lazy jit/interning
+        retry_once()
+        keys_before = len(metrics.snapshot())
+        tracemalloc.start()
+        base = tracemalloc.take_snapshot()
+        for _ in range(200):
+            comm.exchange(cols)
+        retry_once()
+        snap = tracemalloc.take_snapshot()
+        tracemalloc.stop()
+        assert len(metrics.snapshot()) == keys_before  # no new metric keys
+        stats = snap.compare_to(base, "filename")
+        grown = sum(s.size_diff for s in stats
+                    if s.size_diff > 0
+                    and ("/obs/" in (s.traceback[0].filename or "")
+                         or "/faults/" in (s.traceback[0].filename or "")))
+        assert grown < 16 * 1024, f"obs/faults retained {grown} bytes"
+
 
 class TestEnabledTracerBudget:
     def test_per_span_overhead_budget(self):
@@ -183,7 +229,7 @@ class TestChromeExport:
     def test_round_trip_schema(self, tmp_path):
         t = Tracer()
         with t.span("phase", rows=3, note="x"):
-            time.sleep(0.001)
+            time.sleep(0.001)  # repro-lint: disable=sleep-in-test
         t.instant("mark", ok=True)
         path = tmp_path / "trace.json"
         n = t.export(str(path))

@@ -1,0 +1,168 @@
+"""Property-based tests (hypothesis, or the deterministic tests/_hyp.py
+fallback engine) for the serving packers and the coefficient-refresh
+equivalence.
+
+These pin ALGEBRAIC invariants across randomized shapes rather than a
+few hand-picked cases:
+
+- ``iter_slabs``: packing is a pure reshuffle — concatenating the real
+  rows of every slab (in owner order) reproduces the input stream
+  exactly, padding never leaks, and every slab width is a legal bucket.
+- ``left_pad_pack``: right-aligned rows round-trip token-exactly.
+- ``pow2_buckets``: strictly increasing, pow2-spaced, ends at max_batch.
+- ``oos.refresh_coefficients`` == ``oos.from_dual`` for ANY new dual on
+  the same support set — the O(L*C) cached-statistics update is exactly
+  the O(L^2) rebuild (fp32 tolerance), per kernel kind.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from _hyp import given, settings, st
+from repro.core import KernelSpec, oos
+from repro.serve.batching import (bucket_for, iter_slabs, left_pad_pack,
+                                  pow2_buckets)
+
+
+class _Entry:
+    """Minimal iter_slabs entry: payload rows tagged with a request id."""
+
+    def __init__(self, rid, payload):
+        self.rid = rid
+        self.payload = payload
+        self.n = payload.shape[0]
+
+
+class TestSlabPackingProperties:
+    @given(sizes=st.lists(st.integers(1, 20), min_size=1, max_size=12),
+           m=st.integers(1, 7),
+           min_bucket=st.integers(1, 4),
+           factor=st.integers(1, 4))
+    @settings(max_examples=40)
+    def test_iter_slabs_round_trip(self, sizes, m, min_bucket, factor):
+        max_batch = min_bucket * 2 ** factor
+        buckets = pow2_buckets(min_bucket, max_batch)
+        rng = np.random.default_rng(sum(sizes) + m)
+        entries = [
+            _Entry(rid, rng.normal(size=(n, m)).astype(np.float32))
+            for rid, n in enumerate(sizes)]
+        stream = np.concatenate([e.payload for e in entries])
+        owner_ref = np.concatenate(
+            [np.full(e.n, e.rid, np.int64) for e in entries])
+        rows, owners = [], []
+        for slab, take, own in iter_slabs(entries, max_batch, buckets):
+            assert slab.shape[0] in buckets       # every width is a bucket
+            assert slab.shape == (slab.shape[0], m)
+            assert slab.dtype == np.float32
+            assert 0 < take <= max_batch
+            assert (slab[take:] == 0.0).all()     # padding is all-zero
+            rows.append(slab[:take])
+            owners.append(own)
+        packed = np.concatenate(rows)
+        assert packed.shape == stream.shape       # no row lost, none invented
+        assert (packed == stream).all()           # exact round-trip
+        assert (np.concatenate(owners) == owner_ref).all()
+
+    @given(sizes=st.lists(st.integers(1, 9), min_size=0, max_size=6))
+    @settings(max_examples=25)
+    def test_iter_slabs_empty_and_total_take(self, sizes):
+        entries = [_Entry(i, np.ones((n, 3), np.float32))
+                   for i, n in enumerate(sizes)]
+        slabs = list(iter_slabs(entries, 8, pow2_buckets(2, 8)))
+        assert sum(take for _, take, _ in slabs) == sum(sizes)
+        if not sizes:
+            assert slabs == []
+
+    @given(lens=st.lists(st.integers(1, 12), min_size=1, max_size=6),
+           extra_slots=st.integers(0, 3),
+           pad_id=st.sampled_from([0, -1, 99]))
+    @settings(max_examples=40)
+    def test_left_pad_pack_round_trip(self, lens, extra_slots, pad_id):
+        rng = np.random.default_rng(sum(lens) + extra_slots)
+        # tokens are drawn off the pad id so padding is distinguishable
+        prompts = [[int(t) for t in rng.integers(100, 200, size=n)]
+                   for n in lens]
+        slots = len(prompts) + extra_slots
+        toks, plen = left_pad_pack(prompts, slots, pad_id=pad_id)
+        assert toks.shape == (slots, plen)
+        assert plen == max(lens)
+        for i, p in enumerate(prompts):
+            row = toks[i]
+            assert list(row[plen - len(p):]) == p     # right-aligned payload
+            assert (row[:plen - len(p)] == pad_id).all()
+        assert (toks[len(prompts):] == pad_id).all()  # spare slots: all pad
+
+
+class TestBucketProperties:
+    @given(min_bucket=st.integers(1, 64), factor=st.integers(0, 6))
+    @settings(max_examples=40)
+    def test_pow2_buckets_shape(self, min_bucket, factor):
+        max_batch = min_bucket * 2 ** factor
+        buckets = pow2_buckets(min_bucket, max_batch)
+        assert buckets[0] == min_bucket and buckets[-1] == max_batch
+        assert all(a < b for a, b in zip(buckets, buckets[1:]))
+        assert all(b == min_bucket * 2 ** i for i, b in enumerate(buckets))
+
+    @given(min_bucket=st.integers(1, 16), factor=st.integers(0, 5),
+           size=st.integers(1, 600))
+    @settings(max_examples=40)
+    def test_bucket_for_is_monotone_and_minimal(self, min_bucket, factor,
+                                                size):
+        buckets = pow2_buckets(min_bucket, min_bucket * 2 ** factor)
+        b = bucket_for(buckets, size)
+        assert b in buckets
+        if size <= buckets[-1]:
+            assert b >= size                      # holds the rows...
+            smaller = [x for x in buckets if x < b]
+            assert all(x < size for x in smaller)  # ...and is the smallest
+        else:
+            assert b == buckets[-1]               # overflow: widest bucket
+        # monotone: more rows never get a smaller bucket
+        assert bucket_for(buckets, size + 1) >= b
+
+
+class TestRefreshEqualsFromDual:
+    @given(n=st.integers(6, 24), m=st.integers(2, 8), c=st.integers(1, 3),
+           kind=st.sampled_from(["rbf", "linear"]),
+           seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_refresh_matches_full_rebuild(self, n, m, c, kind, seed):
+        """Swapping duals via the cached-statistics path is EXACTLY a
+        from-scratch ``from_dual`` on the same support set."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        a0 = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+        a1 = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+        spec = KernelSpec(kind=kind)
+        base = oos.from_dual(x, a0, spec, center=True)
+        refreshed = oos.refresh_coefficients(base, a1)
+        rebuilt = oos.from_dual(x, a1, spec, gamma=base.gamma, center=True)
+        np.testing.assert_allclose(np.asarray(refreshed.coefs),
+                                   np.asarray(rebuilt.coefs), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(refreshed.row_mean_coef),
+                                   np.asarray(rebuilt.row_mean_coef),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(refreshed.bias),
+                                   np.asarray(rebuilt.bias), atol=1e-5)
+        xq = jnp.asarray(rng.normal(size=(5, m)), jnp.float32)
+        np.testing.assert_allclose(np.asarray(oos.project(refreshed, xq)),
+                                   np.asarray(oos.project(rebuilt, xq)),
+                                   atol=1e-5)
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=8, deadline=None)
+    def test_sharded_refresh_matches_gathered(self, seed):
+        """Per-shard refresh then gather == refresh of the gathered model
+        (shard order IS pooled order for shard_fitted models)."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(24, 5)), jnp.float32)
+        a0 = jnp.asarray(rng.normal(size=(24, 2)), jnp.float32)
+        a1 = jnp.asarray(rng.normal(size=(24, 2)), jnp.float32)
+        model = oos.from_dual(x, a0, KernelSpec(kind="rbf"), center=True)
+        sharded, _ = oos.shard_fitted(model, 3)
+        ref_sh = oos.refresh_coefficients(sharded, a1)
+        ref_central = oos.refresh_coefficients(model, a1)
+        xq = jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(oos.project(oos.gather_fitted(ref_sh), xq)),
+            np.asarray(oos.project(ref_central, xq)), atol=1e-5)

@@ -131,14 +131,15 @@ class TestSharedStepDense:
         assert np.isfinite(np.asarray(a1)).all()
 
 
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="needs 4 host devices (tests/conftest.py sets "
+                           "XLA_FLAGS; a caller overriding it loses them)")
 class TestSpmdResume:
     """SPMD path: interrupt/resume parity on a REAL 4-device host mesh
     (tests/conftest.py exposes 4 CPU devices)."""
 
     @pytest.fixture(scope="class")
     def spmd_fixture(self):
-        if jax.device_count() < 4:
-            pytest.skip("needs 4 host devices")
         from repro.launch.mesh import make_mesh
         nodes, _ = node_dataset(4, 12, 8, seed=0)
         mesh = make_mesh((4,), ("data",))

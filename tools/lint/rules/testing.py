@@ -1,0 +1,82 @@
+"""Test-hygiene rules.
+
+``sleep-in-test`` flags wall-clock sleeps inside the test tree
+(``tests/``, including ``conftest.py`` and test helpers). A test that
+needs ``time.sleep`` to pass encodes a RACE with real time: it is slow
+when the bound is generous and flaky when it is not, and the failure
+mode (a scheduler hiccup on a loaded CI box) is exactly the
+nondeterminism the chaos/fault suite exists to rule out. Synchronize on
+the event you are actually waiting for instead:
+
+- ``threading.Event.wait(timeout)`` / ``Condition.wait_for`` for state,
+- ``Thread.join(timeout=...)`` to bound liveness checks,
+- ``concurrent.futures.wait`` for async results,
+- ``drain()`` / ``settle()`` style helpers for pipelines.
+
+Deliberate duration-shaped sleeps (e.g. manufacturing a measurable span
+length for a tracer test) can pragma the line with
+``# repro-lint: disable=sleep-in-test``.
+
+Matched forms: ``time.sleep(...)`` through any alias of the ``time``
+module, and a bare ``sleep(...)`` when the file does
+``from time import sleep`` (aliased or not). Sleeps in src/ are NOT this
+rule's business — production backoffs are legitimate (the engine's
+retry path uses an interruptible ``Event.wait`` anyway).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..engine import FileContext, Finding, Rule, register
+
+
+def _time_aliases(tree: ast.AST) -> Set[str]:
+    """Names the ``time`` module is bound to in this file."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "time":
+                    out.add(a.asname or "time")
+    return out
+
+
+def _sleep_aliases(tree: ast.AST) -> Set[str]:
+    """Names ``time.sleep`` is bound to via ``from time import sleep``."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for a in node.names:
+                if a.name == "sleep":
+                    out.add(a.asname or "sleep")
+    return out
+
+
+@register
+class SleepInTestRule(Rule):
+    name = "sleep-in-test"
+    summary = ("tests must not wall-clock sleep — wait on the event "
+               "(Event.wait / join(timeout) / futures) instead")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.is_test:
+            return
+        time_names = _time_aliases(ctx.tree)
+        sleep_names = _sleep_aliases(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            hit = (isinstance(f, ast.Attribute) and f.attr == "sleep"
+                   and isinstance(f.value, ast.Name)
+                   and f.value.id in time_names) \
+                or (isinstance(f, ast.Name) and f.id in sleep_names)
+            if hit:
+                yield self.finding(
+                    ctx, node,
+                    "wall-clock sleep in a test is a race with the "
+                    "scheduler — synchronize on the condition itself "
+                    "(Event.wait(timeout), Thread.join(timeout=...), "
+                    "futures.wait) or pragma a deliberate duration sleep")
