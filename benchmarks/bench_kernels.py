@@ -30,7 +30,7 @@ def bench_gram_kernel():
     for n, m in ((256, 784), (512, 784), (1024, 256)):
         x = jnp.asarray(np.random.default_rng(n).normal(
             size=(n, m)).astype(np.float32))
-        got = gram_op(spec, x, interpret=True)
+        got = gram_op(spec, x)
         want = gram_reference(spec, x)
         err = float(jnp.max(jnp.abs(got - want)))
         us = _time(jax.jit(lambda x: gram_reference(spec, x)), x)
@@ -46,7 +46,7 @@ def bench_centering_kernel():
     for n in (512, 2048):
         k = jnp.asarray(np.random.default_rng(n).normal(
             size=(n, n)).astype(np.float32))
-        err = float(jnp.max(jnp.abs(center_op(k, interpret=True)
+        err = float(jnp.max(jnp.abs(center_op(k)
                                     - center_reference(k))))
         us = _time(jax.jit(center_reference), k)
         rows.append((f"centering/{n}", us, f"allclose_err={err:.1e}"))

@@ -71,8 +71,7 @@ def _flush_phase_rows(m: int = 64):
     model = oos.fit_central(x, SPEC, n_components=2, center=True)
     eng = KpcaEngine(model, KpcaServeConfig(
         max_batch=64, min_bucket=8, flush_max_wait_s=0.002))
-    for b in eng.cfg.buckets():
-        eng.project_many([np.zeros((b, m), np.float32)])
+    eng.warmup()                   # compile every bucket before timing
     eng.stats = type(eng.stats)()
 
     was = trace.active()

@@ -21,6 +21,7 @@ import numpy as np
 from repro.core import KernelSpec, oos
 from repro.data import kpca_dataset
 from repro.serve import KpcaEngine, KpcaServeConfig, QueueFullError
+from repro.serve.batching import format_latency
 
 SPEC = KernelSpec(kind="rbf")
 
@@ -37,9 +38,8 @@ def _request_mix(n_requests, m, max_q=32, seed=0):
 
 
 def _warm(eng, m):
-    for b in eng.cfg.buckets():
-        eng.project_many([np.zeros((b, m), np.float32)])
-    eng.stats = type(eng.stats)()
+    eng.warmup()                   # compile every pow2 bucket once
+    eng.stats = type(eng.stats)()  # rows report steady-state compiles=0
 
 
 def _drive_async(eng, reqs, n_threads):
@@ -84,10 +84,11 @@ def bench_serve_async(m: int = 128):
     eng = KpcaEngine(model, cfg)
     _warm(eng, m)
     t0 = time.perf_counter()
-    eng.project_many(reqs)
+    eng.project_many(reqs)         # blocking; returns host numpy
     dt = time.perf_counter() - t0
     rows.append(("serve_async/sync_baseline", dt / n_requests * 1e6,
-                 f"qps={n_q / dt:.0f};requests={n_requests}"))
+                 f"qps={n_q / dt:.0f};requests={n_requests};"
+                 f"compiles={eng.stats.n_compiles}"))
 
     # ---- async futures pipeline vs submitter concurrency ------------------
     for n_threads in (1, 2, 4):
@@ -96,12 +97,14 @@ def bench_serve_async(m: int = 128):
         _warm(eng, m)
         with eng:
             wall, lat, _ = _drive_async(eng, reqs, n_threads)
-        p50 = float(np.percentile(lat, 50)) * 1e3
-        p99 = float(np.percentile(lat, 99)) * 1e3
+        p50 = float(np.percentile(lat, 50))
+        p99 = float(np.percentile(lat, 99))
         rows.append((
             f"serve_async/threads{n_threads}", wall / n_requests * 1e6,
-            f"qps={n_q / wall:.0f};e2e_p50_ms={p50:.2f};"
-            f"e2e_p99_ms={p99:.2f};flushes={eng.stats.n_flushes}"))
+            f"qps={n_q / wall:.0f};e2e_p50={format_latency(p50)};"
+            f"e2e_p99={format_latency(p99)};flushes={eng.stats.n_flushes};"
+            f"compiles={eng.stats.n_compiles};"
+            f"zero_copy={eng.stats.n_zero_copy_slabs}"))
 
     # ---- admission control: bounded queue under the same burst ------------
     for factor, policy in ((None, "off"), (2, "reject"), (2, "shed")):
@@ -113,11 +116,11 @@ def bench_serve_async(m: int = 128):
         with eng:
             wall, lat, rejected = _drive_async(eng, reqs, 4)
         served = len(lat)
-        p99 = float(np.percentile(lat, 99)) * 1e3 if lat else 0.0
+        p99 = float(np.percentile(lat, 99)) if lat else 0.0
         rows.append((
             f"serve_async/admission_{policy}", wall / n_requests * 1e6,
             f"served={served}/{n_requests};rejected={rejected};"
-            f"shed={eng.stats.n_shed};e2e_p99_ms={p99:.2f};"
+            f"shed={eng.stats.n_shed};e2e_p99={format_latency(p99)};"
             f"depth_bound={eng.cfg.queue_capacity()}"))
     return rows
 

@@ -6,6 +6,16 @@ The acceptance bar for the subsystem is >= 2x throughput for the batched
 engine vs one-query-at-a-time projection at batch 64 (on CPU the win is
 dispatch amortization; on TPU it is additionally MXU utilization — a (1, L)
 kernel row leaves 127/128 MXU lanes idle).
+
+Timing validity: every engine row is WALL-CLOCKED around the blocking
+``project_many`` call, whose returned arrays are host numpy (the futures
+resolve only after device->host transfer) — so the timed region provably
+contains the work. Earlier revisions divided by the engine's device-time
+accounting instead, which reported ns-scale "per-call" numbers while the
+caller was actually waiting on the queue; ``tools.lint``'s
+untimed-device-call rule now rejects that pattern in benchmarks/.
+Every row carries a ``compiles=`` field: after mandatory warmup it must
+be 0, otherwise the row timed compilation, not serving.
 """
 
 from __future__ import annotations
@@ -19,6 +29,7 @@ import numpy as np
 from repro.core import KernelSpec, oos
 from repro.data import kpca_dataset
 from repro.serve import KpcaEngine, KpcaServeConfig
+from repro.serve.batching import format_latency
 
 SPEC = KernelSpec(kind="rbf")
 
@@ -56,8 +67,7 @@ def bench_serve_kpca(m: int = 128):
     for batch in (16, 64, 128):
         cfg = KpcaServeConfig(max_batch=batch, min_bucket=8)
         eng = KpcaEngine(model, cfg)
-        for b in cfg.buckets():                       # warm every bucket:
-            eng.project_many([queries[:b]])           # one flush per width
+        eng.warmup()                                  # compile every bucket
         eng.stats = type(eng.stats)()                 # steady-state stats
         # request mix: many small requests (latency) + bulk (throughput)
         rng = np.random.default_rng(batch)
@@ -67,15 +77,20 @@ def bench_serve_kpca(m: int = 128):
             reqs.append(np.take(queries, range(off, off + q), axis=0,
                                 mode="wrap"))
             off += q
-        eng.project_many(reqs)
+        n_rows = sum(r.shape[0] for r in reqs)
+        t0 = time.perf_counter()
+        out = eng.project_many(reqs)                  # returns HOST numpy
+        wall = time.perf_counter() - t0
+        assert all(isinstance(o, np.ndarray) for o in out)
         st = eng.stats
         p50, p99 = st.latency_percentiles()
-        qps = st.queries_per_s
+        qps = n_rows / wall
         speedup = qps / max(qps_b1, 1e-9)
-        rows.append((f"serve/batch{batch}", 1e6 / max(qps, 1e-9),
-                     f"qps={qps:.0f};p50_ms={p50 * 1e3:.2f};"
-                     f"p99_ms={p99 * 1e3:.2f};speedup_vs_per_query="
-                     f"{speedup:.1f}x;compiles={st.n_compiles}"))
+        rows.append((f"serve/batch{batch}", wall / n_rows * 1e6,
+                     f"qps={qps:.0f};p50={format_latency(p50)};"
+                     f"p99={format_latency(p99)};speedup_vs_per_query="
+                     f"{speedup:.1f}x;compiles={st.n_compiles};"
+                     f"zero_copy={st.n_zero_copy_slabs}/{st.n_flushes}"))
 
     # ---- throughput & accuracy vs landmark count -------------------------
     bulk = [queries]                                  # one big request
@@ -84,11 +99,14 @@ def bench_serve_kpca(m: int = 128):
         eng = KpcaEngine(cm, KpcaServeConfig(max_batch=64, min_bucket=8))
         eng.project_many(bulk)                        # compile
         eng.stats = type(eng.stats)()                 # reset after warmup
-        eng.project_many(bulk)
-        qps = eng.stats.queries_per_s
-        rows.append((f"serve/landmarks{n_l}", 1e6 / max(qps, 1e-9),
+        t0 = time.perf_counter()
+        out = eng.project_many(bulk)                  # returns HOST numpy
+        wall = time.perf_counter() - t0
+        qps = n_queries / wall
+        rows.append((f"serve/landmarks{n_l}", wall / n_queries * 1e6,
                      f"qps={qps:.0f};rel_err={float(np.max(err)):.1e};"
-                     f"support={n_l}/{n_train}"))
+                     f"support={n_l}/{n_train};"
+                     f"compiles={eng.stats.n_compiles}"))
     return rows
 
 
@@ -115,14 +133,17 @@ def bench_serve_sharded(m: int = 128):
                              KpcaServeConfig(max_batch=128, min_bucket=8))
             eng.project_many(bulk)                    # compile + warm
             eng.stats = type(eng.stats)()
-            eng.project_many(bulk)
-            qps = eng.stats.queries_per_s
+            t0 = time.perf_counter()
+            eng.project_many(bulk)                    # returns HOST numpy
+            wall = time.perf_counter() - t0
+            qps = n_queries / wall
             lm = "full" if n_l is None else str(n_l)
             rows.append((
-                f"serve/shards{n_shards}_lm{lm}", 1e6 / max(qps, 1e-9),
+                f"serve/shards{n_shards}_lm{lm}", wall / n_queries * 1e6,
                 f"qps={qps:.0f};err_bound={float(np.max(bound)):.1e};"
                 f"support={sharded.n_support};"
-                f"devices={min(n_shards, n_dev)}"))
+                f"devices={min(n_shards, n_dev)};"
+                f"compiles={eng.stats.n_compiles}"))
     return rows
 
 

@@ -104,18 +104,17 @@ def main() -> None:
     else:
         names = ALL_SUITES
 
-    # Force host devices only when the shard suite actually runs — the
-    # other suites' timings should see the unmodified environment.
-    if "shard" in names and args.host_devices > 0 and \
-            "xla_force_host_platform_device_count" \
-            not in os.environ.get("XLA_FLAGS", ""):
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.host_devices}"
-        ).strip()
+    # Environment layer BEFORE backend init (repro.launch.env owns the
+    # ordering footgun): REPRO_* variables apply to every suite; host
+    # devices are forced only when the shard suite actually runs — the
+    # other suites' timings should see the unmodified device count.
+    from repro.launch import env as _env
+    _env.apply_from_environ()
+    if "shard" in names and args.host_devices > 0:
+        _env.apply(_env.EnvConfig(host_devices=args.host_devices))
 
-    # Import AFTER the XLA flag is set: these modules import jax at module
-    # scope, and the flag must precede backend initialization.
+    # Import AFTER the env layer ran: these modules import jax at module
+    # scope, and the flags must precede backend initialization.
     from benchmarks.bench_kernels import (bench_centering_kernel,
                                           bench_gram_kernel)
     from benchmarks.bench_kpca import (bench_runtime_vs_central,

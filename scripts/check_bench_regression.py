@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Benchmark regression gate (stdlib only; CI step).
+
+Compares a freshly generated bench JSON (``benchmarks/run.py --out``)
+against the committed baseline and FAILS when a guarded row's throughput
+regressed by more than the tolerance. The guarded rows are the two the
+dispatch-gap work optimizes end to end:
+
+  * ``serve/batch64``          — batched synchronous serving throughput
+  * ``serve_async/threads4``   — async futures pipeline under concurrency
+
+    python scripts/check_bench_regression.py \
+        --baseline BENCH_9.json --current bench-fresh.json
+
+Tolerance is deliberately wide (30% qps drop) because CI boxes are noisy
+and shared: the gate exists to catch a dispatch-path pessimization (2-5x
+regressions, the kind PR 9 removed), not 5% jitter. Rows missing from
+either file fail loudly — a silently dropped row is how a regression
+hides. Exit codes: 0 ok, 1 regression/missing row, 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+GUARDED_ROWS = ("serve/batch64", "serve_async/threads4")
+_QPS = re.compile(r"(?:^|;)qps=([0-9.eE+-]+)")
+
+
+def load_qps(path: str) -> dict:
+    """name -> qps for every row carrying a ``qps=`` derived field."""
+    with open(path) as f:
+        payload = json.load(f)
+    out = {}
+    for row in payload.get("rows", []):
+        m = _QPS.search(row.get("derived", "") or "")
+        if m:
+            out[row["name"]] = float(m.group(1))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed bench JSON (e.g. BENCH_9.json)")
+    ap.add_argument("--current", required=True,
+                    help="freshly generated bench JSON to check")
+    ap.add_argument("--rows", nargs="*", default=list(GUARDED_ROWS),
+                    help="row names to guard (default: the dispatch-path "
+                         "pair)")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max fractional qps drop before failing "
+                         "(default 0.30)")
+    args = ap.parse_args(argv)
+
+    base = load_qps(args.baseline)
+    cur = load_qps(args.current)
+    failures = []
+    for name in args.rows:
+        if name not in base:
+            failures.append(f"{name}: missing from baseline "
+                            f"{args.baseline}")
+            continue
+        if name not in cur:
+            failures.append(f"{name}: missing from current {args.current}")
+            continue
+        drop = 1.0 - cur[name] / base[name]
+        status = "REGRESSED" if drop > args.tolerance else "ok"
+        print(f"{name}: baseline={base[name]:.0f} qps "
+              f"current={cur[name]:.0f} qps "
+              f"delta={-drop * 100:+.1f}% [{status}]")
+        if drop > args.tolerance:
+            failures.append(
+                f"{name}: {cur[name]:.0f} qps is "
+                f"{drop * 100:.1f}% below baseline {base[name]:.0f} "
+                f"(tolerance {args.tolerance * 100:.0f}%)")
+    for msg in failures:
+        print(f"FAIL {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,7 @@
-"""Jitted wrapper for the centering Pallas kernel (padding + dispatch)."""
+"""Jitted wrapper for the centering Pallas kernel (padding + dispatch).
+
+``block`` defaults to the autotuner's table entry for this shape/dtype/
+backend (``repro.kernels.autotune``), falling back to 256 when untuned."""
 
 from __future__ import annotations
 
@@ -7,15 +10,18 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..autotune import get_tiles
 from .._util import _on_tpu, _pad_to, _round_up
 from .centering import center_tiles
 
 
-def center_op(k: jax.Array, block: int = 256,
+def center_op(k: jax.Array, block: Optional[int] = None,
               interpret: Optional[bool] = None) -> jax.Array:
     """Fused K_c = K - rowmean - colmean + totalmean (paper §6.1 formula)."""
     if interpret is None:
         interpret = not _on_tpu()
+    if block is None:
+        block = get_tiles("centering", k.shape, k.dtype)["block"]
     n, m = k.shape
     kf = k.astype(jnp.float32)
     row = jnp.mean(kf, axis=1)

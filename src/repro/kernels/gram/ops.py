@@ -3,7 +3,11 @@
 Handles padding to block multiples (zero-padding the feature axis is exact:
 dot products and squared norms are unchanged; padded rows/cols are sliced
 off), self-kernel/sq-norm precomputation, gamma resolution and backend
-dispatch (interpret=True everywhere except real TPU)."""
+dispatch (interpret=True everywhere except real TPU).
+
+Tile sizes default to the autotuner's table (``repro.kernels.autotune``)
+keyed by (op, shape-bucket, dtype, backend); explicit ``block_*`` kwargs
+override, and an untuned key falls back to the historical 128x128x512."""
 
 from __future__ import annotations
 
@@ -13,13 +17,15 @@ import jax
 import jax.numpy as jnp
 
 from ...core.kernels_math import KernelSpec, resolve_gamma, _self_k
+from ..autotune import get_tiles
 from .._util import _on_tpu, _pad_to, _round_up
 from .gram import gram_tiles
 
 
 def gram_op(spec: KernelSpec, x: jax.Array, y: Optional[jax.Array] = None,
             gamma: Optional[jax.Array] = None,
-            block_n: int = 128, block_k: int = 128, block_m: int = 512,
+            block_n: Optional[int] = None, block_k: Optional[int] = None,
+            block_m: Optional[int] = None,
             interpret: Optional[bool] = None) -> jax.Array:
     """Gram matrix K[i, j] = K(x_i, y_j) via the Pallas kernel.
 
@@ -30,6 +36,12 @@ def gram_op(spec: KernelSpec, x: jax.Array, y: Optional[jax.Array] = None,
         y = x
     if interpret is None:
         interpret = not _on_tpu()
+    if block_n is None or block_k is None or block_m is None:
+        tiles = get_tiles("gram", (x.shape[0], y.shape[0], x.shape[1]),
+                          x.dtype)
+        block_n = block_n or tiles["block_n"]
+        block_k = block_k or tiles["block_k"]
+        block_m = block_m or tiles["block_m"]
     if spec.kind == "rbf":
         g = resolve_gamma(spec, x) if gamma is None else jnp.asarray(gamma)
         sx = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)

@@ -24,8 +24,23 @@ import jax
 import jax.numpy as jnp
 
 from ...core.kernels_math import KernelSpec, resolve_gamma, _self_k
+from ..autotune import get_tiles
 from .._util import _on_tpu, _pad_to, _round_up
 from .project import project_tiles
+
+
+def _resolve_tiles(op: str, x_query: jax.Array, x_support: jax.Array,
+                   block_q: Optional[int], block_l: Optional[int],
+                   block_m: Optional[int]) -> Tuple[int, int, int]:
+    """Fill unspecified tile sizes from the autotune table (fallback: the
+    historical 128x128x512); explicit kwargs always win."""
+    if block_q is None or block_l is None or block_m is None:
+        tiles = get_tiles(op, (x_query.shape[0], x_support.shape[0],
+                               x_query.shape[1]), x_query.dtype)
+        block_q = block_q or tiles["block_q"]
+        block_l = block_l or tiles["block_l"]
+        block_m = block_m or tiles["block_m"]
+    return block_q, block_l, block_m
 
 
 def _prepare_operands(spec: KernelSpec, x_query: jax.Array,
@@ -66,7 +81,8 @@ def project_op(spec: KernelSpec, x_query: jax.Array, x_support: jax.Array,
                row_mean_coef: Optional[jax.Array] = None,
                bias: Optional[jax.Array] = None,
                gamma: Optional[jax.Array] = None,
-               block_q: int = 128, block_l: int = 128, block_m: int = 512,
+               block_q: Optional[int] = None, block_l: Optional[int] = None,
+               block_m: Optional[int] = None,
                interpret: Optional[bool] = None) -> jax.Array:
     """scores = K(x_query, x_support) @ coefs + rowmean(K) * c + b, fused.
 
@@ -97,6 +113,8 @@ def project_op(spec: KernelSpec, x_query: jax.Array, x_support: jax.Array,
     """
     if interpret is None:
         interpret = not _on_tpu()
+    block_q, block_l, block_m = _resolve_tiles(
+        "project", x_query, x_support, block_q, block_l, block_m)
     b_n, m = x_query.shape
     l, c = coefs.shape
     assert x_support.shape == (l, m), (x_query.shape, x_support.shape,
@@ -131,8 +149,9 @@ def project_op(spec: KernelSpec, x_query: jax.Array, x_support: jax.Array,
 def project_partial_op(spec: KernelSpec, x_query: jax.Array,
                        x_support: jax.Array, coefs_ext: jax.Array,
                        gamma: Optional[jax.Array] = None,
-                       block_q: int = 128, block_l: int = 128,
-                       block_m: int = 512,
+                       block_q: Optional[int] = None,
+                       block_l: Optional[int] = None,
+                       block_m: Optional[int] = None,
                        interpret: Optional[bool] = None) -> jax.Array:
     """Per-shard partial scores: K(x_query, x_support) @ coefs_ext, raw.
 
@@ -160,6 +179,8 @@ def project_partial_op(spec: KernelSpec, x_query: jax.Array,
     """
     if interpret is None:
         interpret = not _on_tpu()
+    block_q, block_l, block_m = _resolve_tiles(
+        "project_partial", x_query, x_support, block_q, block_l, block_m)
     b_n, m = x_query.shape
     l, cp1 = coefs_ext.shape
     assert x_support.shape == (l, m), (x_query.shape, x_support.shape,

@@ -1,8 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be the first two lines: jax locks the device count on first init.
-# The dry-run (and ONLY the dry-run) builds the production mesh from 512
-# placeholder host devices; smoke tests and benches see the default 1.
+from . import env as _env
+_env.apply(_env.EnvConfig(host_devices=512))
+_env.apply_from_environ()
+# ^ MUST precede every jax-importing import: jax locks the device count on
+# first init. The dry-run (and ONLY the dry-run) builds the production
+# mesh from 512 placeholder host devices; smoke tests and benches see the
+# default 1. REPRO_* variables may still override (env.apply merges, the
+# user's explicit XLA_FLAGS win).
 
 """Multi-pod dry-run: .lower().compile() every (architecture x input shape)
 cell on the single-pod (16,16) mesh AND the multi-pod (2,16,16) mesh,

@@ -6,6 +6,9 @@
 
 from __future__ import annotations
 
+from . import env as _env
+_env.apply_from_environ()          # before any jax-importing import
+
 import argparse
 import time
 

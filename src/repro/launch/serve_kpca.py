@@ -13,6 +13,9 @@ admission control refused.
 
 from __future__ import annotations
 
+from . import env as _env
+_env.apply_from_environ()          # before any jax-importing import
+
 import argparse
 import threading
 import time
@@ -26,6 +29,7 @@ from ..data import kpca_dataset
 from ..obs.cli import add_obs_args, obs_session
 from ..faults import FaultError, transient_faults
 from ..serve import KpcaEngine, KpcaServeConfig, ModelHandle, QueueFullError
+from ..serve.batching import format_latency
 
 
 def main():
@@ -138,9 +142,9 @@ def _run(args):
           f"pad_rows={st.n_padded} "
           f"pad_frac={st.n_padded / max(st.n_queries + st.n_padded, 1):.2f} "
           f"model_version={version}")
-    print(f"compute p50={p50 * 1e3:.2f}ms p99={p99 * 1e3:.2f}ms  "
-          f"queue-wait p50={np.percentile(waits, 50) * 1e3:.2f}ms "
-          f"p99={np.percentile(waits, 99) * 1e3:.2f}ms")
+    print(f"compute p50={format_latency(p50)} p99={format_latency(p99)}  "
+          f"queue-wait p50={format_latency(np.percentile(waits, 50))} "
+          f"p99={format_latency(np.percentile(waits, 99))}")
     if args.queue_factor is not None:
         print(f"admission: bound={cfg.queue_capacity()} rows "
               f"policy={args.admission} rejected={sum(rejected)} "

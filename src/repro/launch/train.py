@@ -8,6 +8,9 @@ production mesh; on CPU use --smoke (reduced config, single device)."""
 
 from __future__ import annotations
 
+from . import env as _env
+_env.apply_from_environ()          # before any jax-importing import
+
 import argparse
 import logging
 

@@ -9,6 +9,7 @@ enforces this repo-wide).
 
 import concurrent.futures
 import threading
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -89,14 +90,27 @@ def settle(futures, timeout_s: float = 30.0):
     Returns (results, exceptions) — each future lands in exactly one
     list. Asserts none are still pending at the timeout (the
     fault-tolerance contract: success or typed error, never a hang).
+
+    One SHARED deadline across all futures (not timeout_s each), waited
+    per-future: works for both ``concurrent.futures.Future`` and the
+    engine's slot-table ``SlotFuture`` (which resolves whole flushes
+    through one event and has no ``_condition`` for
+    ``concurrent.futures.wait`` to grab).
     """
-    done, pending = concurrent.futures.wait(futures, timeout=timeout_s)
-    assert not pending, f"{len(pending)} futures hung past {timeout_s}s"
-    results, errors = [], []
+    deadline = time.monotonic() + timeout_s
+    results, errors, pending = [], [], 0
     for f in futures:
-        exc = f.exception(timeout=0)
+        try:
+            exc = f.exception(timeout=max(0.0, deadline - time.monotonic()))
+        except concurrent.futures.TimeoutError:
+            pending += 1
+            continue
+        except concurrent.futures.CancelledError as e:
+            errors.append(e)
+            continue
         if exc is None:
             results.append(f.result(timeout=0))
         else:
             errors.append(exc)
+    assert not pending, f"{pending} futures hung past {timeout_s}s"
     return results, errors

@@ -591,6 +591,89 @@ class TestSleepInTest:
         """, path="tests/test_obs.py") == []
 
 
+class TestUntimedDeviceCall:
+    VIOLATION = """
+        import time
+        import jax
+
+        def bench(x):
+            f = jax.jit(lambda v: v * 2)
+            t0 = time.perf_counter()
+            for _ in range(100):
+                f(x)
+            return (time.perf_counter() - t0) / 100
+    """
+
+    def test_unblocked_jit_call_in_timed_loop_fires(self):
+        out = lint(self.VIOLATION, path="benchmarks/bench_thing.py")
+        assert rules_of(out) == ["untimed-device-call"]
+
+    def test_blocked_twin_is_clean(self):
+        assert lint("""
+            import time
+            import jax
+
+            def bench(x):
+                f = jax.jit(lambda v: v * 2)
+                t0 = time.perf_counter()
+                for _ in range(100):
+                    jax.block_until_ready(f(x))
+                return (time.perf_counter() - t0) / 100
+        """, path="benchmarks/bench_thing.py") == []
+
+    def test_item_and_asarray_also_materialize(self):
+        assert lint("""
+            import time
+            import numpy as np
+            from repro.kernels import gram_op
+
+            def bench(spec, x):
+                t0 = time.perf_counter()
+                out = np.asarray(gram_op(spec, x))
+                dt = time.perf_counter() - t0
+                return out, dt
+        """, path="benchmarks/bench_kernels.py") == []
+
+    def test_kernel_import_counts_as_device_call(self):
+        out = lint("""
+            import time
+            from repro.kernels import gram_op
+
+            def bench(spec, x):
+                t0 = time.perf_counter()
+                gram_op(spec, x)
+                dt = time.perf_counter() - t0
+                return dt
+        """, path="benchmarks/bench_kernels.py")
+        assert rules_of(out) == ["untimed-device-call"]
+
+    def test_out_of_scope_outside_benchmarks(self):
+        assert lint(self.VIOLATION, path="src/repro/serve/engine.py") == []
+
+    def test_clock_start_without_read_is_not_a_region(self):
+        assert lint("""
+            import time
+            import jax
+
+            def warm(x):
+                f = jax.jit(lambda v: v * 2)
+                t0 = time.perf_counter()   # start stamp only, never read
+                f(x)
+        """, path="benchmarks/bench_thing.py") == []
+
+    def test_pragma_suppresses(self):
+        assert lint("""
+            import time
+            import jax
+
+            def bench_dispatch_overhead(x):
+                f = jax.jit(lambda v: v * 2)
+                t0 = time.perf_counter()
+                f(x)  # repro-lint: disable=untimed-device-call
+                return time.perf_counter() - t0
+        """, path="benchmarks/bench_thing.py") == []
+
+
 # ---------------------------------------------------------------------------
 # CLI + repo self-check
 
@@ -601,7 +684,7 @@ class TestCli:
                               capture_output=True, text=True, cwd=cwd)
 
     def test_clean_tree_exits_zero(self):
-        res = self._run("src", "tests")
+        res = self._run("src", "tests", "benchmarks")
         assert res.returncode == 0, res.stdout + res.stderr
 
     def test_violation_exits_one_and_formats(self, tmp_path):
@@ -631,7 +714,8 @@ class TestCli:
         for rule in ("guarded-by", "blocking-in-lock", "thread-join",
                      "lock-order", "bare-acquire", "impure-jit",
                      "closure-capture", "interpret-literal",
-                     "donated-reuse", "span-not-closed", "sleep-in-test"):
+                     "donated-reuse", "span-not-closed", "sleep-in-test",
+                     "untimed-device-call"):
             assert rule in res.stdout
 
     def test_unknown_rule_is_usage_error(self):

@@ -1,0 +1,262 @@
+"""Tests for the dispatch-gap performance path: donated jit entry
+points, start()-time warmup, the ``SlabArena`` staging ring, the
+``RequestQueue.coalesce`` arrival damper, and the Pallas tile-table
+autotuner plumbing (``repro.kernels.autotune``).
+
+Correctness bar: every fast path must be bitwise-identical to the plain
+path it replaces — donation, arena staging, and warmup are dispatch
+optimizations, not numerics changes.
+"""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KernelSpec, oos
+from repro.kernels import autotune
+from repro.serve import KpcaEngine, KpcaServeConfig
+from repro.serve.batching import RequestQueue, SlabArena
+
+SPEC = KernelSpec(kind="rbf", gamma=0.25)
+WAIT = 30.0
+
+# Instrument every serve-layer lock and fail on a recorded AB/BA
+# acquisition cycle (tests/helpers/lockcheck.py).
+pytestmark = pytest.mark.lockcheck
+
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def model():
+    x = jnp.asarray(_rand((48, 12), seed=0))
+    return oos.fit_central(x, SPEC, n_components=2, center=True)
+
+
+class TestDonationParity:
+    def test_donated_scores_bitwise_equal_plain(self, model):
+        reqs = [_rand((int(q), 12), seed=10 + i)
+                for i, q in enumerate([3, 8, 1, 17, 32, 5])]
+        plain = KpcaEngine(model, KpcaServeConfig(
+            max_batch=32, min_bucket=8, donate=False, warmup=False))
+        donated = KpcaEngine(model, KpcaServeConfig(
+            max_batch=32, min_bucket=8, donate=True, warmup=False))
+        out_p = plain.project_many([r.copy() for r in reqs])
+        out_d = donated.project_many([r.copy() for r in reqs])
+        for a, b in zip(out_p, out_d):
+            np.testing.assert_array_equal(a, b)
+
+    def test_donation_does_not_clobber_caller_arrays(self, model):
+        xq = _rand((8, 12), seed=3)
+        keep = xq.copy()
+        eng = KpcaEngine(model, KpcaServeConfig(
+            max_batch=32, min_bucket=8, donate=True, warmup=False))
+        eng.project_many([xq])
+        np.testing.assert_array_equal(xq, keep)
+
+    def test_donated_flushes_counted(self, model):
+        eng = KpcaEngine(model, KpcaServeConfig(
+            max_batch=32, min_bucket=8, donate=True, warmup=False))
+        eng.project_many([_rand((4, 12))])
+        assert eng.stats.n_donated >= 1
+        eng2 = KpcaEngine(model, KpcaServeConfig(
+            max_batch=32, min_bucket=8, donate=False, warmup=False))
+        eng2.project_many([_rand((4, 12))])
+        assert eng2.stats.n_donated == 0
+
+
+class TestWarmup:
+    def test_start_compiles_every_bucket_once(self, model):
+        eng = KpcaEngine(model, KpcaServeConfig(max_batch=32, min_bucket=8))
+        built = eng.warmup()
+        assert built == len(eng.cfg.buckets())
+        assert eng.stats.n_warmup_compiles == built
+        assert eng.warmup() == 0                 # idempotent per shape
+
+    def test_steady_state_traffic_never_compiles(self, model):
+        eng = KpcaEngine(model, KpcaServeConfig(max_batch=32, min_bucket=8))
+        with eng:                                # start() warms by default
+            futs = [eng.submit(_rand((int(q), 12), seed=q))
+                    for q in (1, 7, 8, 9, 20, 32, 2, 15)]
+            for f in futs:
+                f.result(timeout=WAIT)
+        assert eng.stats.n_warmup_compiles == len(eng.cfg.buckets())
+        assert eng.stats.n_compiles == 0
+
+    def test_warmup_off_compiles_lazily(self, model):
+        eng = KpcaEngine(model, KpcaServeConfig(
+            max_batch=32, min_bucket=8, warmup=False))
+        eng.project_many([_rand((4, 12))])
+        assert eng.stats.n_warmup_compiles == 0
+        assert eng.stats.n_compiles == 1
+
+
+class TestSlabArena:
+    def test_fifo_release_reuses_rows(self):
+        a = SlabArena(n_features=4, capacity_rows=16)
+        s0 = a.stage(_rand((6, 4), seed=0))
+        s1 = a.stage(_rand((6, 4), seed=1))
+        assert (s0, s1) == (0, 6)
+        a.release(s0)
+        a.release(s1)
+        s2 = a.stage(_rand((5, 4), seed=2))
+        assert s2 == 0                           # empty ring resets
+        assert a.stats()["n_reused_rows"] >= 5
+
+    def test_wraps_into_released_prefix(self):
+        a = SlabArena(n_features=4, capacity_rows=16)
+        s0 = a.stage(_rand((10, 4), seed=0))
+        s1 = a.stage(_rand((4, 4), seed=1))
+        a.release(s0)                            # head pops, tail run lives
+        s2 = a.stage(_rand((8, 4), seed=2))      # tail space (2) too small
+        assert s2 == 0 and s1 == 10              # wrapped before live run
+        assert a.stats()["live_runs"] == 2
+
+    def test_full_ring_falls_back(self):
+        a = SlabArena(n_features=4, capacity_rows=8)
+        assert a.stage(_rand((8, 4))) == 0
+        assert a.stage(_rand((1, 4))) is None    # full: caller keeps copy
+        assert a.stage(_rand((9, 4))) is None    # oversize: never fits
+        assert a.stats()["n_fallback"] == 2
+
+    def test_staged_rows_hold_exact_payload(self):
+        a = SlabArena(n_features=3, capacity_rows=12)
+        x = _rand((5, 3), seed=7)
+        start = a.stage(x)
+        np.testing.assert_array_equal(a.buf[start:start + 5], x)
+
+    def test_frame_pool_reuses_buffers(self):
+        a = SlabArena(n_features=4, capacity_rows=8)
+        f = a.acquire_frame(16)
+        a.release_frame(f)
+        assert a.acquire_frame(16) is f
+        assert a.stats()["n_frame_allocs"] == 1
+
+    def test_concurrent_submitters_no_stale_rows(self, model):
+        """Hammer one engine from several threads; every request's scores
+        must match its own direct projection — a stale or cross-wired
+        arena row would corrupt exactly this."""
+        eng = KpcaEngine(model, KpcaServeConfig(
+            max_batch=32, min_bucket=8, flush_max_wait_s=0.001))
+        reqs = [_rand((1 + i % 9, 12), seed=100 + i) for i in range(48)]
+        oracle = [np.asarray(oos.project(model, jnp.asarray(r)))
+                  for r in reqs]
+        got = [None] * len(reqs)
+
+        def submitter(tid):
+            for i in range(tid, len(reqs), 4):
+                got[i] = eng.submit(reqs[i]).result(timeout=WAIT)
+
+        with eng:
+            threads = [threading.Thread(target=submitter, args=(t,))
+                       for t in range(4)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        for g, o in zip(got, oracle):
+            np.testing.assert_allclose(g, o, rtol=1e-5, atol=1e-5)
+        assert eng.stats.n_zero_copy_slabs > 0   # arena path actually ran
+
+
+class TestCoalesce:
+    def test_noop_on_empty_queue(self):
+        q = RequestQueue()
+        t0 = time.perf_counter()
+        q.coalesce(64, 0.05, threading.Event())
+        assert time.perf_counter() - t0 < 0.04   # returned without stalling
+
+    def test_noop_when_batch_already_full(self):
+        q = RequestQueue()
+        q.put(_rand((4, 2)), n=4)
+        t0 = time.perf_counter()
+        q.coalesce(4, 0.05, threading.Event())
+        assert time.perf_counter() - t0 < 0.04
+
+    def test_collects_arrivals_until_stall(self):
+        q = RequestQueue()
+        q.put(_rand((1, 2)), n=1)
+
+        def late_submits():
+            for i in range(3):
+                # deliberate pacing: arrivals must trickle INTO the stall
+                # window, which is the behavior under test
+                time.sleep(0.002)  # repro-lint: disable=sleep-in-test
+                q.put(_rand((1, 2)), n=1)
+
+        t = threading.Thread(target=late_submits)
+        t.start()
+        q.coalesce(64, 0.01, threading.Event())
+        t.join()
+        assert q.depth == 4                      # the whole wave landed
+
+    def test_stop_event_breaks_out(self):
+        q = RequestQueue()
+        q.put(_rand((1, 2)), n=1)
+        stop = threading.Event()
+        stop.set()
+        t0 = time.perf_counter()
+        q.coalesce(64, 1.0, stop)
+        assert time.perf_counter() - t0 < 0.5
+
+
+class TestTileTable:
+    def test_round_trip(self, tmp_path):
+        t = autotune.TileTable()
+        key = t.put("gram", (100, 100, 60), np.float32, "cpu",
+                    {"block_n": 64, "block_k": 64, "block_m": 256}, 1.5e-4)
+        path = tmp_path / "tiles.json"
+        t.save(str(path))
+        loaded = autotune.TileTable.load(str(path))
+        assert len(loaded) == 1 and key in loaded.entries
+        hit = loaded.lookup("gram", (100, 100, 60), np.float32, "cpu")
+        assert hit == {"block_n": 64, "block_k": 64, "block_m": 256}
+
+    def test_lookup_buckets_shapes_pow2(self):
+        t = autotune.TileTable()
+        t.put("gram", (128, 128, 64), np.float32, "cpu",
+              {"block_n": 32, "block_k": 32, "block_m": 128}, 1e-4)
+        # 100 and 65 bucket to 128; 60 buckets to 64 -> same key
+        assert t.lookup("gram", (100, 65, 60), np.float32, "cpu") \
+            is not None
+        assert t.lookup("gram", (256, 128, 64), np.float32, "cpu") is None
+
+    def test_get_tiles_falls_back_to_defaults(self):
+        tiles = autotune.get_tiles("gram", (64, 64, 32), np.float32,
+                                   table=autotune.TileTable())
+        assert tiles == autotune.DEFAULT_TILES["gram"]
+
+    def test_get_tiles_prefers_table_hit(self):
+        t = autotune.TileTable()
+        t.put("project", (64, 48, 12), np.float32, "cpu",
+              {"block_q": 32}, 1e-4)
+        tiles = autotune.get_tiles("project", (64, 48, 12), np.float32,
+                                   table=t)
+        assert tiles["block_q"] == 32            # tuned dim wins
+        assert tiles["block_l"] == \
+            autotune.DEFAULT_TILES["project"]["block_l"]  # rest default
+
+    def test_version_mismatch_rejected(self, tmp_path):
+        path = tmp_path / "bad.json"
+        path.write_text('{"version": 999, "entries": {}}')
+        with pytest.raises(ValueError, match="version"):
+            autotune.TileTable.load(str(path))
+
+    def test_env_var_loads_process_table(self, tmp_path, monkeypatch):
+        t = autotune.TileTable()
+        t.put("centering", (64, 64), np.float32, "cpu", {"block": 64}, 1e-4)
+        path = tmp_path / "env_tiles.json"
+        t.save(str(path))
+        monkeypatch.setenv(autotune.TABLE_ENV_VAR, str(path))
+        autotune.set_default_table(None)         # force a re-read
+        try:
+            hit = autotune.default_table().lookup(
+                "centering", (64, 64), np.float32, "cpu")
+            assert hit == {"block": 64}
+        finally:
+            autotune.set_default_table(None)     # don't leak into others

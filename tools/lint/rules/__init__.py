@@ -1,5 +1,5 @@
 """Rule modules register themselves on import (``@register``)."""
 
-from . import concurrency, jaxrules, obs, testing  # noqa: F401
+from . import benchrules, concurrency, jaxrules, obs, testing  # noqa: F401
 
-__all__ = ["concurrency", "jaxrules", "obs", "testing"]
+__all__ = ["benchrules", "concurrency", "jaxrules", "obs", "testing"]

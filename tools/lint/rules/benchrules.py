@@ -1,0 +1,164 @@
+"""Benchmark honesty rules.
+
+JAX dispatch is asynchronous: a jitted call returns a future-like array
+immediately, and the compute lands whenever somebody blocks on it
+(``jax.block_until_ready``, ``.item()``, a ``np.asarray`` device->host
+get). A benchmark that reads the clock after an UNBLOCKED device call
+times the dispatch, not the work — the classic way a kernel "gets 1000x
+faster" in a commit message. The ``untimed-device-call`` rule flags
+exactly that shape inside ``benchmarks/``: a ``time.perf_counter()``
+start, a device-dispatching call in the timed region, and no reachable
+materialization before the matching clock read.
+
+Device-dispatching calls are recognized by local convention, not type
+inference: names bound from ``jax.jit(...)`` in the same file, kernel
+wrapper names ending in ``_op`` (``gram_op``, ``project_op``, ...), and
+names imported from a ``kernels`` module. Materializers are
+``block_until_ready`` (function or method), ``.item()``, and
+``np.asarray``/``np.array``/``float()`` on the region's values. The rule
+stays quiet outside ``benchmarks/`` — library code is allowed to keep
+device values in flight; only a timed region that claims to measure them
+must pin them down.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from ..engine import FileContext, Finding, Rule, register
+
+_CLOCKS = {"perf_counter", "monotonic", "time", "process_time"}
+_BLOCKERS = {"block_until_ready", "item", "asarray", "array", "float",
+             "result"}
+_STMT_LISTS = ("body", "orelse", "finalbody")
+
+
+def _is_clock_call(node: ast.AST) -> bool:
+    """``time.perf_counter()`` / ``time.monotonic()`` / bare
+    ``perf_counter()`` — any zero-arg read of a wall clock."""
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr in _CLOCKS
+    return isinstance(f, ast.Name) and f.id in _CLOCKS
+
+
+def _clock_start_name(stmt: ast.stmt) -> Optional[str]:
+    """``t0 = time.perf_counter()`` -> ``"t0"``."""
+    if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+            and isinstance(stmt.targets[0], ast.Name) \
+            and _is_clock_call(stmt.value):
+        return stmt.targets[0].id
+    return None
+
+
+def _reads_clock_against(stmt: ast.stmt, name: str) -> bool:
+    """Does ``stmt`` contain ``<clock>() - name`` (the region's end)?"""
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub) \
+                and _is_clock_call(node.left) \
+                and isinstance(node.right, ast.Name) \
+                and node.right.id == name:
+            return True
+    return False
+
+
+def _jit_bound_names(tree: ast.Module) -> Set[str]:
+    """Names assigned from ``jax.jit(...)`` / ``jit(...)`` anywhere in
+    the file — calling one of these dispatches device work."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and
+                isinstance(node.value, ast.Call)):
+            continue
+        f = node.value.func
+        jit = (isinstance(f, ast.Attribute) and f.attr == "jit") or \
+              (isinstance(f, ast.Name) and f.id == "jit")
+        if jit:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _kernel_import_names(tree: ast.Module) -> Set[str]:
+    """Names imported from a ``...kernels...`` module (the Pallas wrapper
+    package) — each is a device-dispatching op."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module \
+                and "kernels" in node.module:
+            out.update(a.asname or a.name for a in node.names)
+    return out
+
+
+def _called_name(call: ast.Call) -> Optional[str]:
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+@register
+class UntimedDeviceCallRule(Rule):
+    name = "untimed-device-call"
+    summary = ("benchmarks/ only: a timed region dispatches a jitted/"
+               "Pallas op but never blocks on it before the clock read — "
+               "the row times dispatch, not the work")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        parts = ctx.path.replace("\\", "/").split("/")
+        in_bench = "benchmarks" in parts or \
+            parts[-1].startswith("bench_")
+        if not in_bench:
+            return
+        device_names = _jit_bound_names(ctx.tree) | \
+            _kernel_import_names(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            for field in _STMT_LISTS:
+                stmts = getattr(node, field, None)
+                if isinstance(stmts, list):
+                    yield from self._check_body(ctx, stmts, device_names)
+
+    def _check_body(self, ctx: FileContext, stmts: List[ast.stmt],
+                    device_names: Set[str]) -> Iterator[Finding]:
+        for i, stmt in enumerate(stmts):
+            t_name = _clock_start_name(stmt)
+            if t_name is None:
+                continue
+            region: List[ast.stmt] = []
+            for later in stmts[i + 1:]:
+                region.append(later)
+                if _reads_clock_against(later, t_name):
+                    break
+            else:
+                continue                  # never read back: not a timing
+            yield from self._check_region(ctx, region, device_names)
+
+    def _check_region(self, ctx: FileContext, region: List[ast.stmt],
+                      device_names: Set[str]) -> Iterator[Finding]:
+        device_calls: List[ast.Call] = []
+        blocked = False
+        for stmt in region:
+            for node in ast.walk(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = _called_name(node)
+                if name in _BLOCKERS:
+                    blocked = True
+                elif name in device_names:
+                    device_calls.append(node)
+        if blocked:
+            return
+        for call in device_calls:
+            yield self.finding(
+                ctx, call,
+                f"device call '{_called_name(call)}' inside a timed "
+                "region is never materialized before the clock read — "
+                "JAX dispatch is async, so the region times the enqueue "
+                "only; wrap it in jax.block_until_ready(...) (or read "
+                "the result with .item()/np.asarray) before stopping "
+                "the clock")
