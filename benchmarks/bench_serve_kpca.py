@@ -20,6 +20,7 @@ be 0, otherwise the row timed compilation, not serving.
 
 from __future__ import annotations
 
+import threading
 import time
 
 import jax
@@ -110,15 +111,29 @@ def bench_serve_kpca(m: int = 128):
     return rows
 
 
-def bench_serve_sharded(m: int = 128):
-    """Shard-count x per-shard-landmark sweep for sharded serving.
+def _fit_dual(n, m, c=2, seed=0):
+    """N-row support model without the O(N^3) eigensolve: random dual
+    coefficients through ``oos.from_dual``. Serving cost per query row is
+    identical to a real fit — only the eigenvector VALUES differ — so the
+    large-support rows time exactly what production serving would."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(kpca_dataset(n, m=m, seed=seed))
+    alpha = jnp.asarray(rng.normal(size=(n, c)).astype(np.float32))
+    return oos.from_dual(x, alpha, SPEC, center=True)
 
-    Each row serves one bulk request through a ``KpcaEngine`` over a
-    ``ShardedFittedKpca`` (shard_map + psum when the host exposes enough
-    devices — ``benchmarks/run.py --host-devices`` controls that on CPU —
-    else the same-math single-device reduction). ``err_bound`` is the
-    aggregate relative RKHS error bound of per-shard Nystrom compression;
-    0 means no compression.
+
+def bench_serve_sharded(m: int = 128):
+    """Shard-count x per-shard-landmark x batch sweep for sharded serving.
+
+    Every engine routes adaptively (``KpcaServeConfig.routing="auto"``):
+    per drain the ``ShardedRouter`` picks model-parallel psum ("mp"),
+    query-sharded data-parallel ("dp") or the single-device reduction
+    ("single") from the (rows, support) crossover table. Each row records
+    the policies actually taken (``routing=``) plus the max overlapped
+    drain depth (``depth=``; >0 only on the started, pipelined engines).
+    ``err_bound`` is the aggregate relative RKHS error bound of per-shard
+    Nystrom compression; 0 means no compression. ``--host-devices`` in
+    ``benchmarks/run.py`` controls the CPU device count.
     """
     rows = []
     n_train, n_queries = 512, 512
@@ -131,19 +146,99 @@ def bench_serve_sharded(m: int = 128):
                                               landmarks_per_shard=n_l)
             eng = KpcaEngine(sharded,
                              KpcaServeConfig(max_batch=128, min_bucket=8))
-            eng.project_many(bulk)                    # compile + warm
+            eng.warmup()                              # compile every bucket
             eng.stats = type(eng.stats)()
             t0 = time.perf_counter()
             eng.project_many(bulk)                    # returns HOST numpy
             wall = time.perf_counter() - t0
             qps = n_queries / wall
+            st = eng.stats
             lm = "full" if n_l is None else str(n_l)
             rows.append((
                 f"serve/shards{n_shards}_lm{lm}", wall / n_queries * 1e6,
-                f"qps={qps:.0f};err_bound={float(np.max(bound)):.1e};"
+                f"qps={qps:.0f};routing={st.routing_summary()};"
+                f"depth={st.max_inflight_drains};"
+                f"err_bound={float(np.max(bound)):.1e};"
                 f"support={sharded.n_support};"
                 f"devices={min(n_shards, n_dev)};"
-                f"compiles={eng.stats.n_compiles}"))
+                f"compiles={st.n_compiles}"))
+
+    # ---- forced model-parallel at small support --------------------------
+    # The router deliberately picks "single" for shards4_lmfull (support 512
+    # fits one device; psum + 4-way dispatch only adds overhead on a host
+    # CPU). This row pins what forcing "mp" costs there, and — against the
+    # pre-router baseline in BENCH_9 — what cached per-version placement
+    # bought the mp path itself.
+    sharded, _ = oos.shard_fitted(model, 4)
+    eng = KpcaEngine(sharded, KpcaServeConfig(max_batch=128, min_bucket=8,
+                                              routing="mp"))
+    eng.warmup()
+    eng.stats = type(eng.stats)()
+    t0 = time.perf_counter()
+    eng.project_many(bulk)
+    wall = time.perf_counter() - t0
+    st = eng.stats
+    rows.append((
+        "serve/shards4_lmfull_mp", wall / n_queries * 1e6,
+        f"qps={n_queries / wall:.0f};routing={st.routing_summary()};"
+        f"placements={eng._router.n_placements};"
+        f"compiles={st.n_compiles}"))
+
+    # ---- large support: where sharding actually wins ---------------------
+    # support 4096 x batch {1024, 4096}, shards {1, 4}, streamed through a
+    # STARTED engine so consecutive slab drains overlap (pipeline_depth).
+    # The router takes mp at 1024 rows and dp at 4096 rows; shards4_b4096
+    # is the honest shards>1-beats-shards1 row (per-device kernel tiles
+    # stay cache-resident under dp).
+    n_big, n_reqs = 4096, 8
+    big = _fit_dual(n_big, m)
+
+    def _stream(eng, reqs, n_threads=2):
+        """Submit ``reqs`` from ``n_threads`` threads, each waiting on its
+        own result before resubmitting — so while one drain is on the
+        device the other thread's rows are already queued, and the flusher
+        dispatches the next drain without waiting (overlap depth 2)."""
+        errs = []
+
+        def submitter(tid):
+            try:
+                for i in range(tid, len(reqs), n_threads):
+                    r = eng.submit(reqs[i]).result(timeout=300.0)
+                    assert isinstance(r, np.ndarray)
+            except Exception as e:
+                errs.append(e)
+
+        threads = [threading.Thread(target=submitter, args=(t,))
+                   for t in range(n_threads)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        if errs:
+            raise errs[0]
+        return wall
+
+    for n_shards in (1, 4):
+        shb, _ = oos.shard_fitted(big, n_shards)
+        for b in (1024, 4096):
+            qbig = _queries(b, m, seed=3)
+            reqs = [qbig] * n_reqs
+            n_rows = b * n_reqs
+            eng = KpcaEngine(shb, KpcaServeConfig(
+                max_batch=b, min_bucket=b, flush_max_wait_s=0.0))
+            eng.warmup()                              # one bucket: b
+            eng.stats = type(eng.stats)()
+            with eng:
+                wall = _stream(eng, reqs)
+            st = eng.stats
+            rows.append((
+                f"serve/shards{n_shards}_N4096_b{b}", wall / n_rows * 1e6,
+                f"qps={n_rows / wall:.0f};routing={st.routing_summary()};"
+                f"depth={st.max_inflight_drains};support={n_big};"
+                f"devices={min(n_shards, n_dev)};"
+                f"compiles={st.n_compiles}"))
     return rows
 
 

@@ -3,14 +3,19 @@
 
 Compares a freshly generated bench JSON (``benchmarks/run.py --out``)
 against the committed baseline and FAILS when a guarded row's throughput
-regressed by more than the tolerance. The guarded rows are the two the
-dispatch-gap work optimizes end to end:
+regressed by more than the tolerance. The guarded rows are the paths the
+dispatch-gap and sharded-routing work optimize end to end:
 
   * ``serve/batch64``          — batched synchronous serving throughput
   * ``serve_async/threads4``   — async futures pipeline under concurrency
+  * ``serve/shards4_lmfull``   — adaptively routed sharded serving (the
+                                 row the router rescued from losing to
+                                 one shard)
+  * ``serve/shards4_N4096_b4096`` — the data-parallel large-support drain,
+                                 the config where shards>1 beats shards=1
 
     python scripts/check_bench_regression.py \
-        --baseline BENCH_9.json --current bench-fresh.json
+        --baseline BENCH_10.json --current bench-fresh.json
 
 Tolerance is deliberately wide (30% qps drop) because CI boxes are noisy
 and shared: the gate exists to catch a dispatch-path pessimization (2-5x
@@ -26,7 +31,8 @@ import json
 import re
 import sys
 
-GUARDED_ROWS = ("serve/batch64", "serve_async/threads4")
+GUARDED_ROWS = ("serve/batch64", "serve_async/threads4",
+                "serve/shards4_lmfull", "serve/shards4_N4096_b4096")
 _QPS = re.compile(r"(?:^|;)qps=([0-9.eE+-]+)")
 
 
@@ -45,7 +51,7 @@ def load_qps(path: str) -> dict:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
-                    help="committed bench JSON (e.g. BENCH_9.json)")
+                    help="committed bench JSON (e.g. BENCH_10.json)")
     ap.add_argument("--current", required=True,
                     help="freshly generated bench JSON to check")
     ap.add_argument("--rows", nargs="*", default=list(GUARDED_ROWS),

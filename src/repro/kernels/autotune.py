@@ -358,10 +358,15 @@ def _standard_serving_shapes(m: int, landmarks: int, max_batch: int):
     yield max_batch
 
 
+ALL_OPS = ("gram", "project", "project_partial", "centering")
+
+
 def main(argv=None) -> None:
     """``python -m repro.kernels.autotune --out tile_table.json``: tune
-    gram/project/centering over the standard serving shapes and persist
-    the table. Rerunning against an existing table only fills gaps."""
+    gram/project/project_partial/centering over the standard serving
+    shapes and persist the table. Rerunning against an existing table only
+    fills gaps; ``--assert-cached`` turns the rerun into a CI check that
+    every requested key really answers from the table (0 trials)."""
     import argparse
     ap = argparse.ArgumentParser(description=main.__doc__)
     ap.add_argument("--out", default="tile_table.json")
@@ -370,35 +375,68 @@ def main(argv=None) -> None:
                     help="support-set rows for project/gram")
     ap.add_argument("--max-batch", type=int, default=128,
                     help="widest serving bucket")
+    ap.add_argument("--shards", type=int, default=4,
+                    help="shard count sizing project_partial's per-shard "
+                         "support slice (sharded serving dispatches the "
+                         "partial op at landmarks/shards rows)")
+    ap.add_argument("--ops", nargs="*", default=None, choices=ALL_OPS,
+                    help="subset of ops to tune (default: all)")
     ap.add_argument("--k", type=int, default=3, help="timing repeats")
     ap.add_argument("--force", action="store_true",
                     help="re-search keys already in the table")
+    ap.add_argument("--assert-cached", action="store_true",
+                    help="fail unless every requested key is already a "
+                         "table hit — the CI cache-hit assertion")
     args = ap.parse_args(argv)
 
     from ..core.kernels_math import KernelSpec
     spec = KernelSpec(kind="rbf", gamma=0.5)
     table = TileTable.load(args.out) if os.path.exists(args.out) \
         else TileTable()
+    want = set(args.ops) if args.ops else set(ALL_OPS)
     rng = np.random.default_rng(0)
     xs = rng.normal(size=(args.landmarks, args.m)).astype(np.float32)
     coefs = rng.normal(size=(args.landmarks, 4)).astype(np.float32)
+    n_trials = 0
 
-    blocks, trials = tune_gram(spec, xs, k=args.k, table=table,
-                               force=args.force)
-    print(f"gram {xs.shape}: {blocks} ({len(trials)} trials)")
+    if "gram" in want:
+        blocks, trials = tune_gram(spec, xs, k=args.k, table=table,
+                                   force=args.force)
+        n_trials += len(trials)
+        print(f"gram {xs.shape}: {blocks} ({len(trials)} trials)")
+    # Per-shard slice for the sharded partial op: the serving path calls
+    # project_partial_op with each shard's Lp = ceil(L/S) support rows.
+    lp = max(8, -(-args.landmarks // max(args.shards, 1)))
+    xs_shard = rng.normal(size=(lp, args.m)).astype(np.float32)
+    coefs_ext = rng.normal(size=(lp, 5)).astype(np.float32)
     for b in _standard_serving_shapes(args.m, args.landmarks,
                                       args.max_batch):
         xq = rng.normal(size=(b, args.m)).astype(np.float32)
-        blocks, trials = tune_project(spec, xq, xs, coefs, k=args.k,
-                                      table=table, force=args.force)
-        print(f"project b={b}: {blocks} ({len(trials)} trials)")
-    km = rng.normal(size=(args.landmarks, args.landmarks)) \
-        .astype(np.float32)
-    blocks, trials = tune_centering(km, k=args.k, table=table,
-                                    force=args.force)
-    print(f"centering {km.shape}: {blocks} ({len(trials)} trials)")
+        if "project" in want:
+            blocks, trials = tune_project(spec, xq, xs, coefs, k=args.k,
+                                          table=table, force=args.force)
+            n_trials += len(trials)
+            print(f"project b={b}: {blocks} ({len(trials)} trials)")
+        if "project_partial" in want:
+            blocks, trials = tune_project_partial(
+                spec, xq, xs_shard, coefs_ext, k=args.k, table=table,
+                force=args.force)
+            n_trials += len(trials)
+            print(f"project_partial b={b} (Lp={lp}): {blocks} "
+                  f"({len(trials)} trials)")
+    if "centering" in want:
+        km = rng.normal(size=(args.landmarks, args.landmarks)) \
+            .astype(np.float32)
+        blocks, trials = tune_centering(km, k=args.k, table=table,
+                                        force=args.force)
+        n_trials += len(trials)
+        print(f"centering {km.shape}: {blocks} ({len(trials)} trials)")
     table.save(args.out)
     print(f"wrote {len(table)} entries -> {args.out}")
+    if args.assert_cached and n_trials:
+        raise SystemExit(
+            f"--assert-cached: expected every key to hit the table, but "
+            f"{n_trials} trials ran (stale or missing entries)")
 
 
 __all__ = [

@@ -33,6 +33,39 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes), **_axis_kw(len(axes)))
 
 
+def mesh_shardings(mesh):
+    """(row_sharded, replicated) ``NamedSharding`` pair over a 1-D mesh.
+
+    The two placements sharded serving needs: ``row_sharded`` splits a
+    leading axis one slice per device (model-parallel support slices, or
+    data-parallel query rows); ``replicated`` pins a full copy on every
+    device. Centralized here so the serving layer never constructs
+    partition specs ad hoc — and so the pair is built ONCE per mesh, not
+    per dispatch.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    (axis_name,) = mesh.axis_names
+    return (NamedSharding(mesh, PartitionSpec(axis_name)),
+            NamedSharding(mesh, PartitionSpec()))
+
+
+def replicate_on_mesh(tree, mesh):
+    """``device_put`` every leaf of ``tree`` replicated onto ``mesh``.
+
+    The data-parallel serving layout: the full model on every device,
+    query rows partitioned. One explicit placement that callers cache
+    beats jit re-broadcasting an uncommitted model on every dispatch —
+    the per-call transfer is exactly the overhead the sharded fast path
+    exists to remove (docs/PERFORMANCE.md).
+    """
+    import jax.tree_util
+
+    _, replicated = mesh_shardings(mesh)
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.device_put(leaf, replicated), tree)
+
+
 def make_serving_mesh(n_shards: int, axis_name: str = "shard"):
     """1-D mesh over the first ``n_shards`` devices for sharded kPCA serving.
 

@@ -77,6 +77,10 @@ class EngineStats:
     n_warmup_compiles: int = 0    # programs built by the start() warmup pass
     n_zero_copy_slabs: int = 0    # slabs served as arena slices (no copy)
     n_arena_fallback: int = 0     # submits that missed the arena ring
+    n_routed_mp: int = 0          # sharded slabs routed model-parallel
+    n_routed_dp: int = 0          # sharded slabs routed data-parallel
+    n_routed_single: int = 0      # sharded slabs routed single-device
+    max_inflight_drains: int = 0  # peak pipelined drains in flight at once
     total_time_s: float = 0.0
     # Ring of the most recent PER_REQUEST_WINDOW requests (bounded: a
     # long-running async engine must not accumulate one record per request
@@ -88,6 +92,14 @@ class EngineStats:
     @property
     def queries_per_s(self) -> float:
         return self.n_queries / self.total_time_s if self.total_time_s else 0.0
+
+    def routing_summary(self) -> str:
+        """Compact ``policy:count`` rendering of the sharded routing
+        decisions (bench ``derived`` strings); "-" when nothing routed
+        (single-device models)."""
+        parts = [(p, getattr(self, f"n_routed_{p}"))
+                 for p in ("mp", "dp", "single")]
+        return ",".join(f"{p}:{n}" for p, n in parts if n) or "-"
 
     def latency_percentiles(self, qs=(50, 99)) -> Tuple[float, ...]:
         """Per-request latency percentiles in seconds over the retained

@@ -57,6 +57,7 @@ from .batching import (EngineStats, FlushSlots, QueueFullError,
                        RequestFuture, RequestQueue, RequestStats, SlabArena,
                        SlotFuture, pack_slabs, pow2_buckets)
 from .publisher import ModelHandle
+from .sharded import ShardedRouter, ShardedScores
 
 # Donation is declared unconditionally on the serve entry points; backends
 # that cannot reuse the query slab's buffer for the output (CPU: shapes
@@ -100,6 +101,14 @@ class KpcaServeConfig:
     pipeline_depth: int = 2       # max in-flight drains when the flusher
     #                               pipelines resolve through the device-
     #                               runner thread (fail-fast configs only)
+    # -- sharded routing (docs/PERFORMANCE.md: sharded drain anatomy) ------
+    routing: str = "auto"         # sharded models: "auto" routes per slab
+    #                               via the crossover table; "mp"/"dp"/
+    #                               "single" force one policy
+    crossover: Any = None         # CrossoverTable override for "auto"
+    #                               (None: container-measured defaults;
+    #                               repro.serve.sharded.measure_crossover
+    #                               builds a host-specific one)
     # -- fault tolerance (docs/FAULT_TOLERANCE.md) -------------------------
     max_retries: int = 0          # extra serve attempts per drain; 0 keeps
     #                               the fail-fast contract (a failed batch
@@ -128,12 +137,14 @@ class KpcaEngine:
     """Micro-batching projection server over a fitted kPCA artifact.
 
     Accepts either a single-device ``FittedKpca`` (scored via
-    ``repro.core.oos.project``) or a multi-device ``ShardedFittedKpca``
-    (scored via ``repro.serve.sharded.project_sharded``: per-shard partials
-    under shard_map, psum, global centering applied once post-reduction).
-    The batching/bucketing layer is identical for both — slabs are
-    replicated to every shard, so the engine's traffic shaping composes
-    with device sharding unchanged.
+    ``repro.core.oos.project``) or a multi-device ``ShardedFittedKpca``,
+    dispatched through a ``repro.serve.sharded.ShardedRouter``: each slab
+    is routed model-parallel (support sharded, queries replicated, psum),
+    data-parallel (query rows sharded, no reduction), or single-device per
+    ``cfg.routing`` and the measured crossover table, against a
+    per-version cached device placement of the model. The
+    batching/bucketing layer is identical for both model kinds, so the
+    engine's traffic shaping composes with device sharding unchanged.
 
     Request API: ``submit`` enqueues and returns a future; results arrive
     when a drain happens — synchronously via ``flush`` (or ``project_many``),
@@ -253,32 +264,40 @@ class KpcaEngine:
             "Programs compiled by the start() warmup pass")
 
         if isinstance(model, ShardedFittedKpca):
-            from .sharded import project_sharded
             from ..launch.mesh import make_serving_mesh
             if mesh is None:
                 mesh = make_serving_mesh(model.n_shards)
-
-            def _proj(m, xq):
-                return project_sharded(m, xq, mesh=mesh,
-                                       use_pallas=self.cfg.use_pallas,
-                                       interpret=self.cfg.interpret)
+            # The router owns the whole sharded hot path: the per-slab
+            # policy decision (model-parallel psum vs data-parallel vs
+            # single-device), per-policy donated jit entry points, and a
+            # model placement cache keyed on the handle version — so
+            # steady-state drains never re-transfer the model.
+            self._router = ShardedRouter(
+                mesh, use_pallas=self.cfg.use_pallas,
+                interpret=self.cfg.interpret, policy=self.cfg.routing,
+                crossover=self.cfg.crossover, donate=self.cfg.donate)
+            self._proj = self._proj_donated = None
         else:
             if mesh is not None:
                 raise ValueError("mesh is only meaningful for a "
                                  "ShardedFittedKpca model")
+            if self.cfg.routing != "auto":
+                raise ValueError("cfg.routing is only meaningful for a "
+                                 "ShardedFittedKpca model")
+            self._router = None
 
             def _proj(m, xq):
                 return oos.project(m, xq, use_pallas=self.cfg.use_pallas,
                                    interpret=self.cfg.interpret)
 
-        self._proj = jax.jit(_proj)
-        # Donated twin: XLA may reuse the query slab's buffer for an
-        # intermediate/output instead of allocating. The slab is staged
-        # fresh per dispatch and never read afterwards, so donation is
-        # unconditionally safe; ``cfg.donate`` picks which entry point the
-        # serve path (and the start() warmup) uses.
-        self._proj_donated = jax.jit(_proj, donate_argnums=(1,)) \
-            if self.cfg.donate else self._proj
+            self._proj = jax.jit(_proj)
+            # Donated twin: XLA may reuse the query slab's buffer for an
+            # intermediate/output instead of allocating. The slab is
+            # staged fresh per dispatch and never read afterwards, so
+            # donation is unconditionally safe; ``cfg.donate`` picks which
+            # entry point the serve path (and the start() warmup) uses.
+            self._proj_donated = jax.jit(_proj, donate_argnums=(1,)) \
+                if self.cfg.donate else self._proj
 
     @property
     def model(self):
@@ -409,20 +428,30 @@ class KpcaEngine:
     def warmup(self) -> int:
         """Compile the serve entry point for every pow2 bucket (idempotent
         per shape); returns the number of programs built. Runs the REAL
-        dispatch path (donated entry point included) so steady-state
+        dispatch path (donated entry point included; for sharded models
+        the router's policy-and-placement path, so the policy the router
+        will pick for each bucket is the one compiled) — steady-state
         traffic is guaranteed cache hits."""
-        model, _ = self.handle.get()
+        model, version = self.handle.get()
         with self._stats_lock:
             built0 = self.stats.n_warmup_compiles
         with trace.span("serve.warmup", n_buckets=len(self._buckets)):
             for b in self._buckets:
                 slab = np.zeros((b, model.n_features), np.float32)
-                xq = self._stage_slab(slab, warmup=True)
-                # The donated jit entry point itself, not _run_slab: the
+                # The dispatch entry itself, not _run_slab: the
                 # fault-injection seam wraps _run_slab and must only see
                 # real traffic, while the compile cache this fills is
-                # keyed on the entry point + shapes either way.
-                np.asarray(self._proj_donated(model, xq))
+                # keyed on the entry point + shapes either way. Routing is
+                # deterministic in (rows, model), so warming the chosen
+                # policy per bucket covers everything traffic can hit.
+                if self._router is not None:
+                    policy = self._router.choose(b, model)
+                    xq = self._stage_slab(slab, warmup=True, policy=policy)
+                    np.asarray(self._router.dispatch(
+                        model, version, xq, policy).scores)
+                else:
+                    xq = self._stage_slab(slab, warmup=True)
+                    np.asarray(self._proj_donated(model, xq))
         with self._stats_lock:
             built = self.stats.n_warmup_compiles - built0
         if built:
@@ -532,6 +561,9 @@ class KpcaEngine:
                         inflight.append(self._dispatch_async(entries))
                     except BaseException as e:   # fail THIS batch only
                         self._fail_entries(entries, e)
+                    with self._stats_lock:
+                        if len(inflight) > self.stats.max_inflight_drains:
+                            self.stats.max_inflight_drains = len(inflight)
                     continue
                 try:
                     out, served = self._serve_with_recovery(entries)
@@ -670,22 +702,24 @@ class KpcaEngine:
             with trace.span("serve.dispatch", n_slabs=len(slabs)):
                 with self._dispatch_lock:
                     if pool is not None:
-                        launched = [pool.submit(self._run_slab, model, slab)
+                        launched = [pool.submit(self._run_slab, model,
+                                                version, slab)
                                     for slab, _, _ in slabs]
                     else:
-                        launched = [self._run_slab(model, slab)
+                        launched = [self._run_slab(model, version, slab)
                                     for slab, _, _ in slabs]
             with trace.span("serve.gather", n_slabs=len(slabs)):
                 done = [d.result() if pool is not None else d
                         for d in launched]
-                dts, host, padded, zero_copy = self._collect(slabs, done)
+                dts, host, padded, zero_copy, policies = \
+                    self._collect(slabs, done)
         finally:
             # Frames go back to the pool even when a dispatch fails — the
             # staged device copies already happened, nothing reads them.
             for f in frames:
                 self._arena.release_frame(f)
         return self._commit(entries, plan, dts, host, padded, zero_copy,
-                            len(slabs), model, version, t_start)
+                            policies, len(slabs), model, version, t_start)
 
     def _dispatch_async(self, entries):
         """Pipelined drain (background flusher, fail-fast configs): pack
@@ -704,7 +738,7 @@ class KpcaEngine:
         pool = self._device_pool
         with trace.span("serve.dispatch", n_slabs=len(slabs)):
             with self._dispatch_lock:
-                launched = [pool.submit(self._run_slab, model, slab)
+                launched = [pool.submit(self._run_slab, model, version, slab)
                             for slab, _, _ in slabs]
         return pool.submit(self._finalize, entries, slabs, plan, frames,
                            launched, model, version, t_start)
@@ -719,7 +753,8 @@ class KpcaEngine:
         try:
             try:
                 done = [d.result() for d in launched]
-                dts, host, padded, zero_copy = self._collect(slabs, done)
+                dts, host, padded, zero_copy, policies = \
+                    self._collect(slabs, done)
             finally:
                 for f in frames:
                     self._arena.release_frame(f)
@@ -731,35 +766,49 @@ class KpcaEngine:
         # Wake submitters FIRST: the stats/metrics tail runs in the shadow
         # of their next submit instead of on the request's critical path.
         self._resolve(entries, out)
-        self._account(entries, dts, touched, padded, zero_copy, len(slabs),
-                      version, t_start)
+        self._account(entries, dts, touched, padded, zero_copy, policies,
+                      len(slabs), version, t_start)
 
     @staticmethod
     def _collect(slabs, done):
         """Device->host gets for one drain's finished slabs. Returns
-        (per-slab seconds, host score arrays, pad rows, zero-copy count).
+        (per-slab seconds, host score arrays, pad rows, zero-copy count,
+        per-slab routing policies — None for single-device models).
+
+        For a model-parallel slab the blocking read IS the psum drain —
+        dispatch returned before the reduction ran — so it gets its own
+        ``serve.psum`` span; the flight recorder shows it overlapping the
+        next slab's ``serve.shard_dispatch`` when drains pipeline.
         """
-        dts, host = [], []
+        dts, host, policies = [], [], []
         padded, zero_copy = 0, 0
         for (slab, take, zc), (dev, dt) in zip(slabs, done):
+            policy = None
+            if isinstance(dev, ShardedScores):
+                dev, policy = dev.scores, dev.policy
             t0 = time.perf_counter()
-            scores = np.asarray(dev)         # device->host
+            if policy == "mp" and trace.is_enabled():
+                with trace.span("serve.psum", rows=int(slab.shape[0])):
+                    scores = np.asarray(dev)     # device->host (+ psum)
+            else:
+                scores = np.asarray(dev)         # device->host
             dts.append(dt + time.perf_counter() - t0)
             host.append(scores)
+            policies.append(policy)
             padded += slab.shape[0] - take
             zero_copy += bool(zc)
-        return dts, host, padded, zero_copy
+        return dts, host, padded, zero_copy, policies
 
     def _commit(self, entries, plan, dts, host, padded, zero_copy,
-                n_slabs, model, version, t_start) -> dict:
+                policies, n_slabs, model, version, t_start) -> dict:
         """Assembly + accounting tail for the synchronous drain (the
         pipelined finalize calls the two halves itself, with future
         resolution in between)."""
         out, touched = self._assemble(entries, plan, dts, host, model)
         # Served: the staged rows are consumable again.
         self._release_entries(entries)
-        self._account(entries, dts, touched, padded, zero_copy, n_slabs,
-                      version, t_start)
+        self._account(entries, dts, touched, padded, zero_copy, policies,
+                      n_slabs, version, t_start)
         return out
 
     @staticmethod
@@ -786,14 +835,18 @@ class KpcaEngine:
             touched[e.rid] = sum(dts[si] for si in {s[0] for s in segs})
         return out, touched
 
-    def _account(self, entries, dts, touched, padded, zero_copy,
+    def _account(self, entries, dts, touched, padded, zero_copy, policies,
                  n_slabs, version, t_start) -> None:
         """Stats + metric publication for one served drain. Runs only
         after every slab resolved, so a failed-then-retried flush doesn't
         double-count its slabs."""
         waits = [max(0.0, t_start - e.t_submit) for e in entries]
-        donated = n_slabs if self._proj_donated is not self._proj else 0
+        donated = n_slabs if self.cfg.donate else 0
+        routed = collections.Counter(p for p in policies if p)
         with self._stats_lock:
+            self.stats.n_routed_mp += routed.get("mp", 0)
+            self.stats.n_routed_dp += routed.get("dp", 0)
+            self.stats.n_routed_single += routed.get("single", 0)
             self.stats.n_padded += padded
             self.stats.total_time_s += sum(dts)
             self.stats.n_requests += len(entries)
@@ -826,39 +879,53 @@ class KpcaEngine:
                 # instrumentation.
                 trace.complete("serve.queue_wait", wait, rid=e.rid, n=e.n)
 
-    def _stage_slab(self, slab: np.ndarray, warmup: bool = False) \
-            -> np.ndarray:
+    def _stage_slab(self, slab: np.ndarray, warmup: bool = False,
+                    policy: Optional[str] = None) -> np.ndarray:
         """Dtype cast + compile-cache bookkeeping for one packed slab —
         runs outside every lock but the stats lock, on whichever thread
         dispatches the slab. The slab stays HOST numpy: jit dispatch does
         the host->device transfer inline, which is one dispatch instead
         of an explicit ``jnp.asarray`` put followed by the call (~2x
         cheaper per slab on CPU). The transfer copies, so arena rows are
-        free for reuse the moment their entries resolve."""
+        free for reuse the moment their entries resolve.
+
+        Compile bookkeeping is keyed (shape, policy): a sharded engine
+        compiles one program per (bucket, routing policy), so a warmup
+        that only touched the single-device entry must not mask an mp/dp
+        compile as "steady state" — this key is what the ``n_compiles==0``
+        regression tests actually check."""
         if self.cfg.query_dtype is not None:
             xq = slab.astype(self.cfg.query_dtype, copy=False)
         else:
             xq = slab
+        key = (xq.shape, policy)
         with self._stats_lock:
-            if xq.shape not in self._compiled_shapes:
-                self._compiled_shapes.add(xq.shape)
+            if key not in self._compiled_shapes:
+                self._compiled_shapes.add(key)
                 if warmup:
                     self.stats.n_warmup_compiles += 1
                 else:
                     self.stats.n_compiles += 1
         return xq
 
-    def _run_slab(self, model, slab):
+    def _run_slab(self, model, version, slab):
         """Stage + dispatch one packed slab on the CALLING thread (the
         device-runner when ``start()`` is up, so the ~flat per-transfer
         cost overlaps the flusher's next pack). Returns
-        ``(device scores, seconds)``. Dispatch transfers the host slab
+        ``(device scores, seconds)``; for sharded models the scores carry
+        the routing policy (``ShardedScores``) and the version keys the
+        router's placement cache. Dispatch transfers the host slab
         itself; the on-device copy it makes is dead after the call when
         donation is on, and the caller owns the device->host get."""
         t0 = time.perf_counter()
         with trace.span("serve.device", rows=int(slab.shape[0])):
-            xq = self._stage_slab(slab)
-            out = self._proj_donated(model, xq)
+            if self._router is not None:
+                policy = self._router.choose(int(slab.shape[0]), model)
+                xq = self._stage_slab(slab, policy=policy)
+                out = self._router.dispatch(model, version, xq, policy)
+            else:
+                xq = self._stage_slab(slab)
+                out = self._proj_donated(model, xq)
         return out, time.perf_counter() - t0
 
 

@@ -9,6 +9,7 @@ up as a pytest-timeout failure, not a hung CI job.
 
 import threading
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -16,6 +17,7 @@ import pytest
 from repro.core import KernelSpec, oos
 from repro.serve import (KpcaEngine, KpcaServeConfig, ModelHandle,
                          QueueFullError, ShedError)
+from repro.serve.sharded import project_sharded
 
 SPEC = KernelSpec(kind="rbf", gamma=0.25)
 WAIT = 30.0                                    # generous future timeout
@@ -159,11 +161,11 @@ class TestLifecycle:
         run_slab = eng._run_slab
         boom = dict(armed=True)
 
-        def maybe_boom(mdl, slab):
+        def maybe_boom(mdl, version, slab):
             if boom["armed"]:
                 boom["armed"] = False
                 raise RuntimeError("injected")
-            return run_slab(mdl, slab)
+            return run_slab(mdl, version, slab)
 
         eng._run_slab = maybe_boom
         eng.start()
@@ -245,10 +247,13 @@ class TestVersionConsistencyUnderRefresh:
 
         by_rid = {s.request_id: s for s in eng.stats.per_request}
         assert len(by_rid) == len(futs)
+        # Same program the router's auto policy compiles for this model
+        # (support 48 -> "single"), minus donation — the bitwise oracle.
+        ref = jax.jit(lambda m, q: project_sharded(m, q, policy="single"))
         seen = set()
         for f, got in zip(futs, results):
             v = by_rid[f.request_id].model_version
             seen.add(v)
-            want = np.asarray(eng._proj(versions[v], jnp.asarray(xq)))
+            want = np.asarray(ref(versions[v], jnp.asarray(xq)))
             np.testing.assert_array_equal(got, want)
         assert seen                            # every request attributed

@@ -123,7 +123,7 @@ class TestEngineAccounting:
         eng = KpcaEngine(model, KpcaServeConfig(max_batch=8, min_bucket=8))
         fut = eng.submit(_rand((3, 12), seed=8))
 
-        def boom(_model, _slab):
+        def boom(_model, _version, _slab):
             raise RuntimeError("injected")
 
         run_slab, eng._run_slab = eng._run_slab, boom

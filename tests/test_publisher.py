@@ -281,8 +281,8 @@ class TestEngineVersionIsolation:
         run_slab = eng._run_slab
         fired = dict(n=0)
 
-        def publish_after_first_slab(mdl, slab):
-            out = run_slab(mdl, slab)
+        def publish_after_first_slab(mdl, version, slab):
+            out = run_slab(mdl, version, slab)
             if fired["n"] == 0:
                 h.publish(m2)                  # lands between slab 0 and 1
             fired["n"] += 1

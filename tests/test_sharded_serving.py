@@ -1,10 +1,15 @@
 """Tests for sharded multi-device kPCA serving: ShardedFittedKpca
 (repro.core.oos), the shard_map + psum execution path (repro.serve.sharded),
-per-shard landmark compression, and the engine routing.
+per-shard landmark compression, the adaptive mp/dp/single routing layer
+(CrossoverTable + ShardedRouter: placement cache, donated per-policy entry
+points, warmup coverage), and the engine integration.
 
 tests/conftest.py exposes 4 host CPU devices, so shard counts 1/2/4 all run
-on a REAL mesh (shard_map + psum), not just the single-device fallback.
+on a REAL mesh (shard_map + psum / data-parallel row partitioning), not just
+the single-device fallback.
 """
+
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -14,8 +19,9 @@ import pytest
 from repro.core import KernelSpec, oos
 from repro.core.kernels_math import gram
 from repro.launch.mesh import make_serving_mesh
-from repro.serve import KpcaEngine, KpcaServeConfig
-from repro.serve.sharded import project_sharded
+from repro.serve import KpcaEngine, KpcaServeConfig, ModelHandle
+from repro.serve.sharded import (POLICIES, CrossoverTable, ShardedRouter,
+                                 measure_crossover, project_sharded)
 
 SPEC = KernelSpec(kind="rbf", gamma=0.25)
 N, M, C = 90, 12, 3                       # N chosen indivisible by 4
@@ -184,6 +190,218 @@ class TestEngineRouting:
         mesh = make_serving_mesh(1)
         with pytest.raises(ValueError):
             KpcaEngine(fitted, mesh=mesh)
+
+
+class TestCrossoverTable:
+    def test_no_mesh_or_single_shard_routes_single(self):
+        t = CrossoverTable()
+        assert t.choose(4096, 4096, 4, has_mesh=False) == "single"
+        assert t.choose(4096, 4096, 1, has_mesh=True) == "single"
+
+    def test_threshold_defaults(self):
+        t = CrossoverTable()
+        assert t.choose(64, 512, 4, has_mesh=True) == "single"
+        assert t.choose(256, 4096, 4, has_mesh=True) == "mp"
+        assert t.choose(4096, 4096, 4, has_mesh=True) == "dp"
+
+    def test_measured_entry_overrides_thresholds(self):
+        t = CrossoverTable(table={(256, 4096): "dp"})
+        assert t.choose(256, 4096, 4, has_mesh=True) == "dp"
+        assert t.choose(256, 8192, 4, has_mesh=True) == "mp"  # unmeasured
+
+    def test_dp_requires_divisible_rows(self):
+        t = CrossoverTable()
+        # default choice would be dp, but 4097 rows don't divide over 4
+        assert t.choose(4097, 4096, 4, has_mesh=True) == "mp"
+        # measured dp at a SMALL support degrades to single, not mp
+        t2 = CrossoverTable(table={(16, 512): "dp"})
+        assert t2.choose(9, 512, 4, has_mesh=True) == "single"
+
+
+class TestRoutingParity:
+    """fp32 parity of every policy against the unsharded reference, on the
+    real 4-device CPU mesh (acceptance: routing is a perf decision, never a
+    numerics one)."""
+
+    @pytest.mark.parametrize("policy", ["mp", "dp", "single", "auto"])
+    def test_project_sharded_policies_match(self, fitted, queries, policy):
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        mesh = make_serving_mesh(4)
+        assert mesh is not None and mesh.devices.size == 4
+        q16 = queries[:16]                    # divisible by 4 (dp-feasible)
+        got = np.asarray(project_sharded(sharded, q16, mesh=mesh,
+                                         policy=policy))
+        want = np.asarray(oos.project(fitted, q16))
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_dp_indivisible_rows_degrade_same_math(self, fitted, queries):
+        sharded, _ = oos.shard_fitted(fitted, 4)   # 17 rows % 4 != 0
+        got = np.asarray(project_sharded(sharded, queries, policy="dp"))
+        want = np.asarray(oos.project(fitted, queries))
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_invalid_policy_rejected(self, fitted, queries):
+        sharded, _ = oos.shard_fitted(fitted, 2)
+        with pytest.raises(ValueError):
+            project_sharded(sharded, queries, policy="fastest")
+        with pytest.raises(ValueError):
+            ShardedRouter(make_serving_mesh(2), policy="fastest")
+
+    @pytest.mark.parametrize("routing", ["auto", "mp", "dp", "single"])
+    def test_engine_routing_parity(self, fitted, routing):
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        reqs = [_rand((q, M), seed=20 + q) for q in (8, 16, 32)]
+        ref = KpcaEngine(fitted, KpcaServeConfig(max_batch=32, min_bucket=8))
+        eng = KpcaEngine(sharded, KpcaServeConfig(max_batch=32, min_bucket=8,
+                                                  routing=routing))
+        want = ref.project_many([r.copy() for r in reqs])
+        got = eng.project_many([r.copy() for r in reqs])
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=3e-4, atol=3e-4)
+        if routing != "auto":     # forced policy taken for EVERY slab
+            for p in POLICIES:
+                n = getattr(eng.stats, f"n_routed_{p}")
+                assert (n > 0) == (p == routing), eng.stats.routing_summary()
+
+    def test_engine_rejects_routing_for_plain_model(self, fitted):
+        with pytest.raises(ValueError):
+            KpcaEngine(fitted, KpcaServeConfig(routing="mp"))
+
+
+class TestPlacementCache:
+    def test_placement_paid_once_per_version_and_group(self, fitted,
+                                                       queries):
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        router = ShardedRouter(make_serving_mesh(4), donate=False)
+        q = jnp.asarray(queries[:16])
+        router.dispatch(sharded, 0, q, "mp")
+        router.dispatch(sharded, 0, q, "mp")       # cache hit
+        assert router.n_placements == 1
+        router.dispatch(sharded, 0, q, "dp")       # second group
+        assert router.n_placements == 2
+        router.dispatch(sharded, 1, q, "mp")       # new version invalidates
+        assert router.n_placements == 3
+        router.dispatch(sharded, 1, q, "single")   # home placement: free
+        assert router.n_placements == 3
+
+    def test_engine_drains_reuse_placement(self, fitted):
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        eng = KpcaEngine(sharded, KpcaServeConfig(max_batch=16, min_bucket=8,
+                                                  routing="mp"))
+        for i in range(3):
+            eng.project_many([_rand((16, M), seed=50 + i)])
+        assert eng._router.n_placements == 1
+
+
+class TestShardedWarmup:
+    def test_warmup_reaches_sharded_dispatch(self, fitted):
+        """Regression: warmup must go through the ROUTER (policy choice +
+        placement + donated entry), so the first sharded drain after
+        warmup compiles nothing."""
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        eng = KpcaEngine(sharded, KpcaServeConfig(max_batch=32, min_bucket=8,
+                                                  warmup=False))
+        built = eng.warmup()
+        assert built == len(eng._buckets) > 0
+        assert eng.warmup() == 0               # idempotent
+        eng.project_many([_rand((q, M), seed=30) for q in (8, 16, 32)])
+        assert eng.stats.n_compiles == 0
+
+    @pytest.mark.parametrize("routing", ["mp", "dp"])
+    def test_warmup_covers_forced_policies(self, fitted, routing):
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        eng = KpcaEngine(sharded, KpcaServeConfig(
+            max_batch=16, min_bucket=16, routing=routing, warmup=False))
+        eng.warmup()
+        eng.project_many([_rand((16, M), seed=31)])
+        assert eng.stats.n_compiles == 0
+        assert getattr(eng.stats, f"n_routed_{routing}") == 1
+
+
+class TestMeasureCrossover:
+    def test_measures_feasible_policies_per_bucket(self, fitted):
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        t = measure_crossover(sharded, row_buckets=(8, 16), reps=1)
+        assert set(t.table) == {(8, 128), (16, 128)}   # pow2(N=90) == 128
+        assert all(p in POLICIES for p in t.table.values())
+        # the measured entry drives choose() for its bucket
+        for (rows, _), policy in t.table.items():
+            assert t.choose(rows, N, 4, has_mesh=True) == policy
+
+
+@pytest.mark.lockcheck
+class TestOverlappedShardedDrainHammer:
+    WAIT = 30.0
+
+    def test_hammer_no_stale_version_no_clobber(self, fitted):
+        """4 submitter threads over a STARTED sharded engine, racing a
+        stream of per-shard coefficient publishes through the overlapped
+        (pipelined) drain. Every result must match the oracle for the
+        version recorded in its request stats (no stale shard, no mixed
+        versions), no submitted array may be clobbered by donation, and
+        version churn must never recompile (placement is re-paid, programs
+        are not)."""
+        sharded, _ = oos.shard_fitted(fitted, 4)
+        handle = ModelHandle(sharded)
+        eng = KpcaEngine(handle, KpcaServeConfig(
+            max_batch=16, min_bucket=16, flush_max_wait_s=0.002,
+            routing="mp", warmup=False))
+        eng.warmup()
+        eng.stats = type(eng.stats)()
+        versions = [sharded]                   # version v -> model
+        n_threads, n_per = 4, 5
+        outs = [[] for _ in range(n_threads)]
+        errors = []
+
+        def submitter(tid):
+            try:
+                for i in range(n_per):
+                    x = _rand((16, M), seed=100 + tid * n_per + i)
+                    keep = x.copy()
+                    fut = eng.submit(x)
+                    r = fut.result(timeout=self.WAIT)
+                    outs[tid].append((fut.request_id, x, keep, r))
+            except Exception as e:             # surfaces after join
+                errors.append(e)
+
+        def publisher():
+            rng = np.random.default_rng(41)
+            try:
+                for i in range(8):
+                    shard = i % sharded.n_shards
+                    a = rng.normal(size=(sharded.shard_sizes[shard], C)) \
+                        .astype(np.float32)
+                    handle.refresh_shard(shard, jnp.asarray(a))
+                    versions.append(handle.current())
+            except Exception as e:
+                errors.append(e)
+
+        threads = [threading.Thread(target=submitter, args=(t,))
+                   for t in range(n_threads)]
+        threads.append(threading.Thread(target=publisher))
+        with eng:
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        assert not errors, errors
+
+        by_rid = {s.request_id: s for s in eng.stats.per_request}
+        ref = jax.jit(lambda m, q: project_sharded(m, q, policy="mp"))
+        seen = set()
+        for tid in range(n_threads):
+            assert len(outs[tid]) == n_per
+            for rid, x, keep, r in outs[tid]:
+                np.testing.assert_array_equal(x, keep)     # no clobber
+                v = by_rid[rid].model_version
+                seen.add(v)
+                want = np.asarray(ref(versions[v], jnp.asarray(keep)))
+                # a stale shard would be off by O(1); 1e-6 is program skew
+                np.testing.assert_allclose(r, want, rtol=1e-6, atol=1e-6)
+        assert seen                            # every request attributed
+        assert eng.stats.n_compiles == 0       # churn re-places, not re-jits
+        assert eng.stats.n_routed_mp > 0       # the forced policy was taken
+        assert eng._router.n_placements >= len(seen)   # re-placed per version
 
 
 class TestValidation:
